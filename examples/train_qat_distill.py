@@ -1,0 +1,73 @@
+"""End-to-end driver: QAT-train a ~100M-param LM for a few hundred steps
+with the full MKQ recipe (MSE-based LSQ + MINI distillation from a deeper
+fp teacher), fault-tolerant checkpointing included.
+
+This is deliverable (b)'s "train ~100M model for a few hundred steps" —
+sized for this CPU container via --scale (default 'small' ~ 4M params;
+pass --scale 100m on real hardware; the code path is identical).
+
+Run:  PYTHONPATH=src python examples/train_qat_distill.py --steps 200
+"""
+import argparse
+
+import jax
+
+from repro.configs import TrainHParams, get_config, reduced
+from repro.core.policy import QuantPolicy
+from repro.data import lm_batches
+from repro.launch.train import run_training
+from repro.models import api
+
+
+def configs(scale: str):
+    base = get_config("stablelm-3b")
+    if scale == "100m":
+        student = base.replace(num_layers=12, d_model=768, num_heads=12,
+                               num_kv_heads=12, d_ff=2048, vocab_size=32000,
+                               dtype="float32", remat=False)
+        teacher = student.replace(num_layers=16, d_model=1024, num_heads=16,
+                                  num_kv_heads=16, d_ff=2816)
+    else:
+        student = reduced(base)
+        teacher = student.replace(num_layers=6, d_model=96, num_heads=6,
+                                  num_kv_heads=6, d_ff=192, head_dim=16)
+    return student, teacher
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--steps", type=int, default=200)
+    p.add_argument("--scale", default="small", choices=["small", "100m"])
+    p.add_argument("--grad-mode", default="mse", choices=["mse", "ste"])
+    p.add_argument("--ckpt-dir", default="/tmp/repro_qat_distill")
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=64)
+    args = p.parse_args()
+
+    cfg, tcfg = configs(args.scale)
+    n = cfg.num_layers
+    policy = QuantPolicy(num_layers=n, mode="fake", last_k_int4=n // 2,
+                         grad_mode=args.grad_mode)
+    hp = TrainHParams(total_steps=args.steps, lr_weights=5e-4, alpha=10.0,
+                      beta=1.0)
+    data = lm_batches(cfg.vocab_size, args.seq, args.batch)
+
+    # fp teacher: a few warm-up steps on the same stream (stands in for a
+    # pretrained checkpoint — no downloads in this container)
+    print("[example] training fp teacher briefly...")
+    tpolicy = QuantPolicy(num_layers=tcfg.num_layers, mode="none")
+    tstate, _ = run_training(tcfg, tpolicy, TrainHParams(
+        total_steps=max(50, args.steps // 4), lr_weights=1e-3),
+        iter(data), ckpt_dir=args.ckpt_dir + "_teacher", ckpt_every=0,
+        log_every=25)
+    teacher = tstate["params"]
+
+    print(f"[example] QAT ({args.grad_mode}) + MINI distillation...")
+    state, metrics = run_training(
+        cfg, policy, hp, iter(data), ckpt_dir=args.ckpt_dir, ckpt_every=50,
+        distill_teacher=teacher, teacher_cfg=tcfg, log_every=20)
+    print("[example] final metrics:", metrics)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Architecture registry: ``--arch <id>`` lookup + reduced smoke variants.
+
+Exact assigned configs (sources in each module's docstring / the assignment
+table). ``reduced(cfg)`` shrinks a config to a CPU-runnable smoke variant of
+the same family (same block wiring, tiny dims).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .base import (SHAPES, ModelConfig, ShapeSpec, TrainHParams, input_specs,
+                   shape_applicable)
+
+from . import archs as _archs
+
+ARCHS: dict[str, ModelConfig] = _archs.ARCHS
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """Smoke-test variant: same family/wiring, tiny dims, CPU-friendly."""
+    kw = dict(
+        num_layers=4, d_model=64, num_heads=4, head_dim=16, d_ff=128,
+        vocab_size=256, dtype="float32", remat=False,
+        attn_chunk_threshold=64, attn_chunk=32, ssm_chunk=8,
+        moe_group_size=16,
+    )
+    kw["num_kv_heads"] = min(cfg.num_kv_heads, 4) if cfg.num_kv_heads < cfg.num_heads else 4
+    if cfg.family == "moe":
+        kw.update(num_experts=8, top_k=min(cfg.top_k, 4), expert_d_ff=32,
+                  shared_expert_d_ff=64 if cfg.shared_expert_d_ff else 0)
+    if cfg.family == "xlstm":
+        kw.update(num_layers=4, slstm_every=2, num_heads=2, num_kv_heads=2,
+                  ssm_expand=2, d_ff=0)
+    if cfg.family == "hybrid":
+        kw.update(num_layers=4, attn_every=2, ssm_state=8, ssm_head_dim=16,
+                  ssm_expand=2, num_kv_heads=4)
+    if cfg.family == "encdec":
+        kw.update(enc_layers=2, dec_layers=2, num_layers=2)
+    if cfg.family == "vlm":
+        kw.update(num_patches=8)
+    return dataclasses.replace(cfg, **kw)
+
+
+__all__ = ["ARCHS", "SHAPES", "ModelConfig", "ShapeSpec", "TrainHParams",
+           "get_config", "reduced", "input_specs", "shape_applicable"]

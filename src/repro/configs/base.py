@@ -1,0 +1,162 @@
+"""Config system: model/shape/quant/train/mesh dataclasses + input_specs.
+
+Every assigned architecture is a ``ModelConfig`` in its own module; the
+registry in ``configs/__init__`` resolves ``--arch <id>`` and provides the
+reduced smoke-test variant of each config.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | xlstm | hybrid | encdec | vlm | bert
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0           # 0 => d_model // num_heads
+    qkv_bias: bool = False
+    out_bias: bool = False
+    norm: str = "rms"           # rms | ln
+    act: str = "swiglu"         # swiglu | gelu  (gelu => non-gated 2-matmul FFN)
+    rope: bool = True
+    rope_theta: float = 10000.0
+    causal: bool = True
+    tie_embeddings: bool = False
+    learned_pos: bool = False   # BERT-style positional embeddings
+    # MoE
+    num_experts: int = 0
+    top_k: int = 0
+    shared_expert_d_ff: int = 0
+    expert_d_ff: int = 0
+    capacity_factor: float = 1.25
+    moe_group_size: int = 512
+    moe_impl: str = "dense"     # dense (one-hot einsum) | sorted (gather)
+    router_aux_coef: float = 0.001
+    # enc-dec
+    enc_layers: int = 0
+    dec_layers: int = 0
+    # SSM / hybrid
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    attn_every: int = 0         # zamba2: shared attention block every k-th layer
+    slstm_every: int = 0        # xlstm: sLSTM block every k-th layer (rest mLSTM)
+    # VLM
+    num_patches: int = 0
+    input_kind: str = "tokens"  # tokens | embeds | tokens+patches
+    # execution
+    attn_chunk_threshold: int = 2048   # seqs longer than this use chunked
+    attn_chunk: int = 1024             # (flash-style) attention
+    attn_seq_shard: bool = False       # context-parallel chunked attention
+    dp_axes: tuple = ("data",)         # mesh DP axis names (for constraints)
+    fused_proj: bool = False           # fused QKV + gate-up FFN matmuls
+    dtype: str = "bfloat16"
+    remat: bool = True
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding rows padded to a TP-shardable multiple (logits for the
+        padding rows are masked to -inf before any softmax/loss)."""
+        return (self.vocab_size + 255) // 256 * 256
+
+    @property
+    def compute_dtype(self):
+        return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[self.dtype]
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                   # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+# Full-attention archs skip long_500k (DESIGN.md §5); SSM/hybrid run it.
+SUBQUADRATIC_FAMILIES = ("xlstm", "hybrid")
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    if shape.name == "long_500k" and cfg.family not in SUBQUADRATIC_FAMILIES:
+        return False, "full-attention arch: 500k decode skipped (DESIGN.md §5)"
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    cd = cfg.compute_dtype
+    if shape.kind == "train":
+        specs = {}
+        if cfg.input_kind == "embeds":        # audio frontend stub: frame embeddings
+            specs["src_embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), cd)
+            specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        elif cfg.input_kind == "tokens+patches":
+            specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_patches, cfg.d_model), cd)
+            specs["patch_mask"] = jax.ShapeDtypeStruct((B, S), jnp.bool_)
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        specs["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        return specs
+    if shape.kind == "prefill":
+        specs = {}
+        if cfg.input_kind == "embeds":
+            specs["src_embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), cd)
+            specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        elif cfg.input_kind == "tokens+patches":
+            specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_patches, cfg.d_model), cd)
+            specs["patch_mask"] = jax.ShapeDtypeStruct((B, S), jnp.bool_)
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        return specs
+    # decode: one new token against a cache of seq_len
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), i32),
+            "cache": None}  # cache specs are family-specific; see launch.dryrun
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHParams:
+    """QAT hyperparameters (paper §5.2)."""
+    lr_weights: float = 1e-5
+    lr_act_scale: float = 0.01
+    lr_weight_scale: float = 0.001
+    warmup_frac: float = 0.10
+    total_steps: int = 1000
+    adam_b1: float = 0.9
+    adam_b2: float = 0.999
+    adam_eps: float = 1e-8
+    grad_clip: float = 1.0
+    alpha: float = 10.0         # output-distill weight
+    beta: float = 1.0           # MINI-distill weight
+    microbatch: int = 0         # 0 = no grad accumulation
+    grad_compression: bool = False

@@ -1,0 +1,115 @@
+"""Calibration: initial quantization scales (paper §3.1, following Q8BERT).
+
+* Weights: s = max|w| / l_max, per-tensor or per-row (per output channel).
+* Activations: run ~200 forward batches, collect |a| statistics, and set
+  s = (top-0.01% largest |a|)  / l_max  — i.e. the 99.99th percentile.
+
+The activation collector is a deterministic reservoir: an exact percentile over
+every activation of every batch would hold the whole stream; we keep a seeded
+uniform subsample per batch plus the running max, and take the percentile over
+the reservoir at finalize (max-clamped). Deterministic across runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .quantizer import qrange, scale_shape
+
+__all__ = ["weight_scale", "ActCalibrator", "PERCENTILE_DEFAULT",
+           "calibration_mode", "active", "record_input"]
+
+PERCENTILE_DEFAULT = 99.99  # "top 0.01% largest value"
+
+# --------------------------------------------------------------- hook machinery
+# During calibration the model runs its EAGER layer-loop path (forwards swap
+# lax.scan for a python loop) and every quantizable matmul reports its input's
+# |a| percentile here, in deterministic call order. core.qat maps the stream
+# back onto the s_a leaves via the per-family site order.
+_COLLECTOR: Optional[list] = None
+
+
+class calibration_mode:
+    """Context manager enabling activation-stat collection."""
+
+    def __init__(self, percentile: float = PERCENTILE_DEFAULT):
+        self.percentile = percentile
+        self.records: list[np.ndarray] = []
+
+    def __enter__(self):
+        global _COLLECTOR
+        if _COLLECTOR is not None:
+            raise RuntimeError("nested calibration_mode")
+        _COLLECTOR = self
+        return self
+
+    def __exit__(self, *exc):
+        global _COLLECTOR
+        _COLLECTOR = None
+        return False
+
+
+def active() -> bool:
+    return _COLLECTOR is not None
+
+
+def record_input(x: jax.Array, per_axis0: bool = False) -> None:
+    """Record percentile(|x|); per_axis0 keeps the leading (expert) axis."""
+    if _COLLECTOR is None:
+        return
+    a = np.abs(np.asarray(jax.device_get(x), dtype=np.float32))
+    if per_axis0:
+        stat = np.percentile(a.reshape(a.shape[0], -1), _COLLECTOR.percentile,
+                             axis=1)
+    else:
+        stat = np.percentile(a.reshape(-1), _COLLECTOR.percentile)
+    _COLLECTOR.records.append(np.asarray(stat, np.float32))
+
+
+def weight_scale(w: jax.Array, bits: int, axis: Optional[int] = None) -> jax.Array:
+    """abs-max weight scale; ``axis`` is the kept (per-channel) axis, None=per-tensor."""
+    _, qmax = qrange(bits)
+    if axis is None:
+        s = jnp.max(jnp.abs(w))
+    else:
+        axis = axis % w.ndim
+        red = tuple(i for i in range(w.ndim) if i != axis)
+        s = jnp.max(jnp.abs(w), axis=red, keepdims=True)
+    return jnp.maximum(s / qmax, 1e-8).astype(jnp.float32)
+
+
+@dataclasses.dataclass
+class ActCalibrator:
+    """Streaming |activation| percentile estimator (one per quantized activation)."""
+
+    percentile: float = PERCENTILE_DEFAULT
+    samples_per_batch: int = 4096
+    seed: int = 0
+
+    def __post_init__(self):
+        self._chunks: list[np.ndarray] = []
+        self._absmax = 0.0
+        self._step = 0
+
+    def update(self, a: jax.Array) -> None:
+        flat = np.abs(np.asarray(jax.device_get(a), dtype=np.float32).reshape(-1))
+        self._absmax = max(self._absmax, float(flat.max(initial=0.0)))
+        if flat.size > self.samples_per_batch:
+            rng = np.random.default_rng(self.seed + self._step)
+            flat = rng.choice(flat, size=self.samples_per_batch, replace=False)
+        self._chunks.append(flat)
+        self._step += 1
+
+    def scale(self, bits: int) -> jax.Array:
+        """Finalize: s = percentile(|a|) / l_max (clamped to running max)."""
+        _, qmax = qrange(bits)
+        if not self._chunks:
+            return jnp.float32(1.0)
+        sample = np.concatenate(self._chunks)
+        p = float(np.percentile(sample, self.percentile))
+        p = min(max(p, 1e-8), self._absmax if self._absmax > 0 else p)
+        return jnp.float32(p / qmax)

@@ -1,0 +1,113 @@
+"""MINI (MiniLM-style) distillation with scale factors (paper §4.2).
+
+Last-layer-only self-attention relation distillation:
+
+  L_attention = sum_a KL( A_a^S || A_a^T ),      A = softmax(q k^T / sqrt(d_r))
+  L_value     = sum_a KL( VR_a^S || VR_a^T ),    VR = softmax(v v^T / sqrt(d_r))
+  L_final     = L_train + alpha * L_output + beta * (L_attention + L_value)
+
+Because only the LAST layer's q/k/v taps are used, the teacher may be deeper
+than the student with no layer mapping. Teacher width/head-count mismatch is
+handled MiniLM-v2 style: q/k/v are re-split into ``num_relation_heads`` before
+building relations, so only the relation-head count must agree.
+
+For attention-free blocks (xLSTM, Mamba2 — DESIGN.md §5) the relation terms are
+inapplicable; :func:`hidden_state_loss` is the documented substitute.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "kl_from_logits",
+    "relation_distribution",
+    "minilm_losses",
+    "output_loss",
+    "hidden_state_loss",
+    "combine_losses",
+]
+
+_NEG_INF = -1e9
+
+
+def kl_from_logits(p_logits: jax.Array, q_logits: jax.Array,
+                   mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean KL(P || Q) over leading dims; distributions over the last axis."""
+    p_log = jax.nn.log_softmax(p_logits.astype(jnp.float32), axis=-1)
+    q_log = jax.nn.log_softmax(q_logits.astype(jnp.float32), axis=-1)
+    kl = jnp.sum(jnp.exp(p_log) * (p_log - q_log), axis=-1)
+    if mask is not None:
+        kl = kl * mask
+        return jnp.sum(kl) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(kl)
+
+
+def relation_distribution(a: jax.Array, b: jax.Array, num_relation_heads: int,
+                          mask: Optional[jax.Array] = None) -> jax.Array:
+    """Relation logits softmax'd over keys: (B, S, D) x (B, S, D) -> (B, R, S, S).
+
+    Splits the feature dim into R relation heads (MiniLM-v2) so student/teacher
+    widths may differ as long as D is divisible by R on each side.
+    """
+    B, S, D = a.shape
+    R = num_relation_heads
+    if D % R:
+        raise ValueError(f"feature dim {D} not divisible by relation heads {R}")
+    dr = D // R
+    ah = a.reshape(B, S, R, dr).transpose(0, 2, 1, 3)
+    bh = b.reshape(B, S, R, dr).transpose(0, 2, 1, 3)
+    logits = jnp.einsum("brsd,brtd->brst", ah, bh) / jnp.sqrt(jnp.float32(dr))
+    if mask is not None:  # mask keys: (B, S) -> (B, 1, 1, S)
+        logits = jnp.where(mask[:, None, None, :] > 0, logits, _NEG_INF)
+    return logits
+
+
+def minilm_losses(taps_s: dict, taps_t: dict, num_relation_heads: int,
+                  mask: Optional[jax.Array] = None) -> tuple[jax.Array, jax.Array]:
+    """(L_attention, L_value) from last-layer q/k/v taps {'q','k','v': (B,S,D)}."""
+    qmask = None if mask is None else mask
+    attn_s = relation_distribution(taps_s["q"], taps_s["k"], num_relation_heads, mask)
+    attn_t = relation_distribution(taps_t["q"], taps_t["k"], num_relation_heads, mask)
+    l_attn = kl_from_logits(attn_s, attn_t,
+                            None if qmask is None else qmask[:, None, :])
+    val_s = relation_distribution(taps_s["v"], taps_s["v"], num_relation_heads, mask)
+    val_t = relation_distribution(taps_t["v"], taps_t["v"], num_relation_heads, mask)
+    l_val = kl_from_logits(val_s, val_t,
+                           None if qmask is None else qmask[:, None, :])
+    return l_attn, l_val
+
+
+def output_loss(logits_s: jax.Array, logits_t: jax.Array,
+                kind: str = "mse", mask: Optional[jax.Array] = None) -> jax.Array:
+    """L_output: MSE or KL on the network outputs (paper §3.3)."""
+    if kind == "mse":
+        d = jnp.square(logits_s.astype(jnp.float32) - logits_t.astype(jnp.float32))
+        d = jnp.mean(d, axis=-1)
+        if mask is not None:
+            return jnp.sum(d * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        return jnp.mean(d)
+    if kind == "kl":
+        return kl_from_logits(logits_t, logits_s, mask)  # teacher as target dist
+    raise ValueError(f"unknown output loss {kind!r}")
+
+
+def hidden_state_loss(h_s: jax.Array, h_t: jax.Array,
+                      mask: Optional[jax.Array] = None) -> jax.Array:
+    """Substitute relation loss for attention-free blocks (DESIGN.md §5)."""
+    d = jnp.mean(jnp.square(h_s.astype(jnp.float32) - h_t.astype(jnp.float32)), -1)
+    if mask is not None:
+        return jnp.sum(d * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(d)
+
+
+def combine_losses(l_train: jax.Array, l_output: jax.Array, l_attn: jax.Array,
+                   l_value: jax.Array, alpha: float = 10.0, beta: float = 1.0):
+    """Paper eq. (10). Returns (L_final, dict of parts)."""
+    total = l_train + alpha * l_output + beta * (l_attn + l_value)
+    return total, {
+        "loss/train": l_train, "loss/output": l_output,
+        "loss/attention": l_attn, "loss/value": l_value, "loss/total": total,
+    }

@@ -1,0 +1,75 @@
+"""int4 nibble packing and deploy-time weight quantization.
+
+Packed int4 layout (TPU adaptation, DESIGN.md §3): values live in the paper's
+k=4 grid [-7, 8]; we store them biased by +7 into unsigned nibbles [0, 15],
+two per byte along the CONTRACTING (K) axis:
+
+    packed[k, n] = (code[2k, n] & 0xF) | (code[2k+1, n] << 4)
+
+so a (K, N) int-code matrix becomes a (K/2, N) uint8 matrix — 8x fewer HBM
+bytes than f32, 2x fewer than int8. The Pallas kernel unpacks nibbles in VMEM
+and feeds the int8 MXU path.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .quantizer import qrange, quantize_to_int
+
+INT4_BIAS = 7  # maps [-7, 8] -> [0, 15]
+
+
+def pack_int4(codes: jax.Array, axis: int = 0) -> jax.Array:
+    """Pack int4 codes (int8 carrier, values in [-7, 8]) into uint8 nibbles.
+
+    ``axis`` is the packing axis (must have even extent; pad beforehand).
+    """
+    axis = axis % codes.ndim
+    if codes.shape[axis] % 2 != 0:
+        raise ValueError(f"pack axis extent must be even, got {codes.shape[axis]}")
+    biased = (codes.astype(jnp.int32) + INT4_BIAS).astype(jnp.uint8)
+    lo = jax.lax.slice_in_dim(biased, 0, codes.shape[axis], stride=2, axis=axis)
+    hi = jax.lax.slice_in_dim(biased, 1, codes.shape[axis], stride=2, axis=axis)
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_int4(packed: jax.Array, axis: int = 0) -> jax.Array:
+    """Inverse of :func:`pack_int4`; returns int8 codes in [-7, 8]."""
+    axis = axis % packed.ndim
+    lo = (packed & 0xF).astype(jnp.int8) - INT4_BIAS
+    hi = (packed >> 4).astype(jnp.int8) - INT4_BIAS
+    stacked = jnp.stack([lo, hi], axis=axis + 1)  # (..., K/2, 2, ...)
+    new_shape = list(packed.shape)
+    new_shape[axis] = packed.shape[axis] * 2
+    return stacked.reshape(new_shape)
+
+
+def quantize_weight(
+    w: jax.Array, s: jax.Array, bits: int, pack_axis: Optional[int] = -2
+):
+    """Quantize one weight for deployment. Returns (codes_or_packed, s).
+
+    ``w`` is (..., K, N) with per-out-channel scales (..., 1, N) or scalar.
+    bits=4 packs along K = axis -2 (pads K to even); bits=8 stores int8.
+    Leading dims cover stacked layers and/or experts.
+    """
+    codes = quantize_to_int(w, s, bits)
+    if bits == 4 and pack_axis is not None:
+        axis = pack_axis % codes.ndim
+        k = codes.shape[axis]
+        if k % 2 != 0:
+            pad = [(0, 0)] * codes.ndim
+            pad[axis] = (0, 1)
+            codes = jnp.pad(codes, pad)
+        return pack_int4(codes, axis=axis), s
+    return codes, s
+
+
+def int4_packed_nbytes(shape: tuple[int, ...], axis: int = 0) -> int:
+    n = 1
+    for i, d in enumerate(shape):
+        n *= (d + 1) // 2 if i == axis % len(shape) else d
+    return n

@@ -1,0 +1,149 @@
+"""LSQ quantizers with MSE-based (MKQ-BERT) and STE-based (LSQ/KDLSQ) scale gradients.
+
+The paper's central algorithmic contribution (§4.1):
+
+  Q[x] = s * round(clamp(x / s, l_min, l_max)),   l_min = -2^{k-1}+1, l_max = 2^{k-1}
+
+Scale gradient modes
+--------------------
+``ste``  (LSQ / KDLSQ-BERT baseline, Esser et al. 2019):
+    dQ/ds per element = round(x/s) - x/s      (in range)
+                      = l_min / l_max         (clipped)
+    and the incoming cotangent is applied:  ds = sum(g * dQ/ds).
+
+``mse``  (MKQ-BERT, §4.1.2): the scale's gradient is *redefined* as the gradient of
+    the quantization error itself, independent of the task cotangent:
+    Gradient(s) := d(Q[x]-x)^2/ds = 2 * sum( (Q[x]-x) * round(clamp(x/s)) ).
+
+Both modes use the standard LSQ straight-through gradient for ``x`` (pass-through
+inside the clip range, zero outside).
+
+Scales can be per-tensor (scalar) or per-channel along one axis (``per-row`` in the
+paper's terminology). ``s`` must be shaped to broadcast against ``x``
+(use :func:`scale_shape`).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "qrange",
+    "scale_shape",
+    "reduce_axes_for_scale",
+    "lsq_quantize",
+    "fake_quant",
+    "quantize_to_int",
+    "dequantize",
+]
+
+
+def qrange(bits: int) -> tuple[int, int]:
+    """Clamp bounds. Paper: l_min = -2^{k-1}+1, l_max = 2^{k-1} (k=4: [-7, 8]).
+
+    For k=8 the paper's l_max = 128 cannot live in the int8 deployment carrier
+    (it wraps to -128), so the 8-bit grid is [-127, 127]: train == deploy
+    (DESIGN.md §6). k=4 keeps the paper's exact asymmetric grid.
+    """
+    if bits >= 8:
+        return -(2 ** (bits - 1)) + 1, 2 ** (bits - 1) - 1
+    return -(2 ** (bits - 1)) + 1, 2 ** (bits - 1)
+
+
+def scale_shape(x_shape: tuple[int, ...], axis: Optional[int]) -> tuple[int, ...]:
+    """Broadcastable shape for a scale: all-ones except ``axis`` (None => scalar ())."""
+    if axis is None:
+        return ()
+    axis = axis % len(x_shape)
+    return tuple(x_shape[i] if i == axis else 1 for i in range(len(x_shape)))
+
+
+def reduce_axes_for_scale(x_ndim: int, s_shape: tuple[int, ...]) -> tuple[int, ...]:
+    """Axes of x to sum over when reducing an elementwise grad to the scale's shape."""
+    if s_shape == ():
+        return tuple(range(x_ndim))
+    # s broadcasts against x: sum over axes where s has extent 1 (plus leading axes).
+    lead = x_ndim - len(s_shape)
+    axes = list(range(lead))
+    for i, d in enumerate(s_shape):
+        if d == 1:
+            axes.append(lead + i)
+    return tuple(axes)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def lsq_quantize(x: jax.Array, s: jax.Array, bits: int, grad_mode: str) -> jax.Array:
+    """Fake-quantize ``x`` with learned scale ``s`` (broadcastable against x)."""
+    qmin, qmax = qrange(bits)
+    z = x / s
+    zq = jnp.round(jnp.clip(z, qmin, qmax))
+    return (s * zq).astype(x.dtype)
+
+
+def _lsq_fwd(x, s, bits, grad_mode):
+    return lsq_quantize(x, s, bits, grad_mode), (x, s)
+
+
+def _lsq_bwd(bits, grad_mode, res, g):
+    x, s = res
+    qmin, qmax = qrange(bits)
+    f32 = jnp.float32
+    xf, sf, gf = x.astype(f32), s.astype(f32), g.astype(f32)
+    z = xf / sf
+    zq = jnp.round(jnp.clip(z, qmin, qmax))
+    in_range = (z >= qmin) & (z <= qmax)
+    # --- gradient w.r.t. x: straight-through inside the clip range (LSQ standard).
+    dx = jnp.where(in_range, gf, 0.0).astype(x.dtype)
+    # --- gradient w.r.t. s.
+    axes = reduce_axes_for_scale(x.ndim, s.shape)
+    if grad_mode == "ste":
+        elem = jnp.where(in_range, zq - z, jnp.clip(z, qmin, qmax))
+        ds = jnp.sum(gf * elem, axis=axes).reshape(s.shape)
+        # LSQ grad normalizer 1/sqrt(N * qmax) (Esser et al. 2019).
+        n = x.size / max(s.size, 1)
+        ds = ds / jnp.sqrt(n * qmax)
+    elif grad_mode == "mse":
+        # MKQ-BERT §4.1.2: Gradient(s) = 2 * sum((Q[x]-x) * round(clamp(x/s))).
+        # The task cotangent is intentionally NOT applied; the scale descends the
+        # quantization MSE directly. Averaged per-element to keep lr's in the
+        # paper's reported range usable across tensor sizes.
+        q = sf * zq
+        n = x.size / max(s.size, 1)
+        ds = 2.0 * jnp.sum((q - xf) * zq, axis=axes).reshape(s.shape) / n
+    else:  # pragma: no cover - guarded by callers
+        raise ValueError(f"unknown grad_mode {grad_mode!r}")
+    return dx, ds.astype(s.dtype)
+
+
+lsq_quantize.defvjp(_lsq_fwd, _lsq_bwd)
+
+
+def fake_quant(
+    x: jax.Array,
+    s: jax.Array,
+    bits: int,
+    grad_mode: str = "mse",
+    enabled: bool = True,
+) -> jax.Array:
+    """QAT fake-quantization entry point (identity when disabled or bits is None)."""
+    if not enabled or bits is None:
+        return x
+    return lsq_quantize(x, s, int(bits), grad_mode)
+
+
+def quantize_to_int(x: jax.Array, s: jax.Array, bits: int) -> jax.Array:
+    """Deploy-time quantization to integer codes (no gradient path).
+
+    Uses the same qrange() grid as QAT fake-quant, so deployed int codes
+    reproduce the trained grid exactly (train == deploy; see qrange for the
+    k=8 int8-carrier note)."""
+    qmin, qmax = qrange(bits)
+    z = jnp.round(jnp.clip(x.astype(jnp.float32) / s, qmin, qmax))
+    return z.astype(jnp.int8)
+
+
+def dequantize(q: jax.Array, s: jax.Array, dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * s).astype(dtype)

@@ -1,0 +1,2 @@
+from .synthetic import (SyntheticLM, SyntheticClassification,  # noqa: F401
+                        lm_batches, classification_batches)

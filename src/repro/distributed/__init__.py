@@ -1,0 +1,3 @@
+from .sharding import (batch_spec, make_mesh, param_specs,  # noqa: F401
+                       shardings_for)
+from .compression import compressed_grad_mean  # noqa: F401

@@ -1,0 +1,64 @@
+"""Gradient compression for cross-pod reduction (beyond-paper, 1000-node).
+
+Two schemes, used inside ``shard_map`` over the DP axes by the DDP train path:
+
+* ``bf16``: reduce in bfloat16 — halves wire bytes vs f32, no state. This is
+  the production default (visible in the HLO as bf16 all-reduces).
+* ``int8_ef``: int8 quantization with ERROR FEEDBACK (1-bit-Adam style):
+  t = g + e;  q = round(t / s) with shared scale s (psum-max);
+  reduce int32(q); e' = t - q*s. The residual e' is carried across steps, so
+  compression error is compensated rather than accumulated — the same
+  mechanism that makes the paper's 4-bit grids trainable, applied to the
+  gradient wire format.
+
+Both return the MEAN gradient over the axis, matching an uncompressed psum.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def compressed_grad_mean(grads, axis_names, method: str = "bf16",
+                         error_state: Optional[dict] = None):
+    """Mean-reduce ``grads`` over mesh ``axis_names`` with compression.
+
+    Must be called inside shard_map with ``axis_names`` manual axes.
+    Returns (mean_grads, new_error_state).
+    """
+    n = 1
+    for a in axis_names:
+        n *= jax.lax.axis_size(a)
+
+    if method == "none":
+        return jax.tree.map(
+            lambda g: jax.lax.pmean(g, axis_names), grads), error_state
+    if method == "bf16":
+        return jax.tree.map(
+            lambda g: jax.lax.pmean(g.astype(jnp.bfloat16), axis_names)
+            .astype(g.dtype), grads), error_state
+    if method != "int8_ef":
+        raise ValueError(f"unknown compression {method!r}")
+
+    if error_state is None:
+        error_state = jax.tree.map(
+            lambda g: jnp.zeros_like(g, dtype=jnp.float32), grads)
+
+    def one(g, e):
+        t = g.astype(jnp.float32) + e
+        # shared scale across the axis so dequant is exact after int32 psum
+        s = jax.lax.pmax(jnp.max(jnp.abs(t)), axis_names) / 127.0
+        s = jnp.maximum(s, 1e-12)
+        q = jnp.clip(jnp.round(t / s), -127, 127).astype(jnp.int8)
+        e_new = t - q.astype(jnp.float32) * s
+        total = jax.lax.psum(q.astype(jnp.int32), axis_names)
+        mean = total.astype(jnp.float32) * s / n
+        return mean.astype(g.dtype), e_new
+
+    flat, treedef = jax.tree.flatten(grads)
+    eflat = jax.tree.leaves(error_state)
+    out = [one(g, e) for g, e in zip(flat, eflat)]
+    return (jax.tree.unflatten(treedef, [o[0] for o in out]),
+            jax.tree.unflatten(treedef, [o[1] for o in out]))

@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: causal flash attention (forward) with GQA.
+
+The jnp-level chunked attention (models/attention.py) is numerically right
+but materializes every (chunk x chunk) score/probability block in HBM — the
+dry-run roofline shows attention score traffic DOMINATING the memory term of
+prefill cells. This kernel keeps the whole online-softmax state (scores,
+probs, m/l accumulators) in VMEM: HBM traffic collapses to q/k/v reads and
+the output write, turning the S^2 byte term into an S^2 FLOP term (where the
+MXU is the limiter, not HBM).
+
+Layout: grid (B*H, S/bq); each step owns one (bq, dh) query block and loops
+over KV blocks 0..current (causal) with `fori_loop`, carrying (acc, m, l) in
+VREGs/VMEM. K/V arrive via BlockSpecs indexed by the batch-head program id;
+GQA is handled by mapping query-head h to kv-head h // group.
+
+Block defaults: bq=bk=512, dh up to 256 -> VMEM = q(512*dh) + k/v blocks
+(2*512*dh) + scores f32 (512*512*4 = 1 MiB) + acc — ~2-3 MiB, comfortably
+within the ~16 MiB budget with double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -2.0e38
+DEFAULT_BQ = 512
+DEFAULT_BK = 512
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int, causal: bool,
+            scale: float):
+    qi = pl.program_id(1)
+    S = k_ref.shape[1]
+    n_k = S // bk
+    q = q_ref[0].astype(jnp.float32) * scale            # (bq, dh)
+    dh = q.shape[-1]
+
+    def body(j, carry):
+        acc, m, l = carry
+        k = k_ref[0, pl.ds(j * bk, bk), :].astype(jnp.float32)   # (bk, dh)
+        v = v_ref[0, pl.ds(j * bk, bk), :].astype(jnp.float32)
+        s = q @ k.T                                           # (bq, bk)
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[:, None] + p @ v
+        return acc_new, m_new, l_new
+
+    acc = jnp.zeros((bq, dh), jnp.float32)
+    m = jnp.full((bq,), NEG_INF, jnp.float32)
+    l = jnp.zeros((bq,), jnp.float32)
+    # causal: kv blocks strictly after this q block contribute nothing
+    upper = (qi + 1) * bq // bk if causal else n_k
+    acc, m, l = jax.lax.fori_loop(0, upper, body, (acc, m, l))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",
+                                             "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, bq: int = DEFAULT_BQ,
+                           bk: int = DEFAULT_BK,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, S, H, dh); k/v: (B, S, Hkv, dh) with H % Hkv == 0."""
+    B, S, H, dh = q.shape
+    Hkv = k.shape[2]
+    group = H // Hkv
+    bq, bk = min(bq, S), min(bk, S)
+    assert S % bq == 0 and S % bk == 0 and bq % bk == 0, (S, bq, bk)
+    scale = 1.0 / float(dh) ** 0.5
+    # (B*H, S, dh) query layout; kv mapped via h // group
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, dh)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, S, dh)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, S, dh)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bk=bk, causal=causal, scale=scale),
+        grid=(B * H, S // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda bh, i: (bh, i, 0)),
+            pl.BlockSpec((1, S, dh), lambda bh, i, g=group: (bh // g, 0, 0)),
+            pl.BlockSpec((1, S, dh), lambda bh, i, g=group: (bh // g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda bh, i: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, dh), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, S, dh).transpose(0, 2, 1, 3)

@@ -1,0 +1,81 @@
+"""jit'd public wrappers for the Pallas kernels (padding, dtype plumbing).
+
+On non-TPU backends the wrappers run the kernels in interpret mode (kernel
+body executed in Python on CPU) so the SAME code path is testable offline;
+on TPU they compile to Mosaic. ``qlinear`` dispatches here when
+``QuantSpec.use_pallas`` is set.
+"""
+from __future__ import annotations
+
+
+import jax
+import jax.numpy as jnp
+
+from .act_quant import act_quant_pallas
+from .int4_matmul import int4_matmul_pallas
+from .int8_matmul import int8_matmul_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x, m, axis):
+    r = x.shape[axis] % m
+    if r == 0:
+        return x, 0
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, m - r)
+    return jnp.pad(x, pad), m - r
+
+
+def act_quant(x: jax.Array, s: jax.Array, bits: int = 8) -> jax.Array:
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    x2, pm = _pad_to(x2, 8, 0)
+    out = act_quant_pallas(x2, s, bits=bits, bm=min(256, x2.shape[0]),
+                           interpret=not _on_tpu())
+    if pm:
+        out = out[:x2.shape[0] - pm]
+    return out.reshape(*lead, x.shape[-1])
+
+
+def int8_matmul(x: jax.Array, w8: jax.Array, s_a: jax.Array, s_w: jax.Array,
+                a_bits: int = 8) -> jax.Array:
+    """x: (M, K) float -> quantize -> int8 GEMM -> dequant. w8: (K, N) int8."""
+    x8 = act_quant(x, s_a, bits=a_bits)
+    M, K = x8.shape
+    N = w8.shape[1]
+    bm = _pick(M, 128)
+    bn = _pick(N, 128)
+    bk = _pick(K, 512)
+    return int8_matmul_pallas(x8, w8, s_a, s_w.reshape(1, N), bm=bm, bn=bn,
+                              bk=bk, out_dtype=x.dtype,
+                              interpret=not _on_tpu())
+
+
+def int4_matmul(x: jax.Array, wp: jax.Array, s_a: jax.Array, s_w: jax.Array,
+                a_bits: int = 8) -> jax.Array:
+    """x: (M, K) float; wp: (K/2, N) packed nibbles."""
+    x8 = act_quant(x, s_a, bits=a_bits)
+    M, K = x8.shape
+    if wp.shape[0] * 2 != K:  # packing padded K to even; pad x to match
+        x8 = jnp.pad(x8, ((0, 0), (0, wp.shape[0] * 2 - K)))
+        K = wp.shape[0] * 2
+    N = wp.shape[1]
+    bm = _pick(M, 128)
+    bn = _pick(N, 128)
+    bk = _pick(K, 512, even=True)
+    return int4_matmul_pallas(x8, wp, s_a, s_w.reshape(1, N), bm=bm, bn=bn,
+                              bk=bk, out_dtype=x.dtype,
+                              interpret=not _on_tpu())
+
+
+def _pick(dim: int, target: int, even: bool = False) -> int:
+    """Largest divisor of ``dim`` <= target (even if requested)."""
+    b = min(dim, target)
+    while b > 1:
+        if dim % b == 0 and (not even or b % 2 == 0):
+            return b
+        b -= 1
+    return 1

@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INT4_BIAS = 7
+
+
+def int8_matmul_ref(x8, w8, s_a, s_w, out_dtype=jnp.float32):
+    acc = jax.lax.dot_general(x8, w8, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32) * (s_a * s_w)).astype(out_dtype)
+
+
+def unpack_int4_ref(wp):
+    lo = (wp & 0xF).astype(jnp.int8) - INT4_BIAS
+    hi = (wp >> 4).astype(jnp.int8) - INT4_BIAS
+    kk, n = wp.shape
+    return jnp.stack([lo, hi], axis=1).reshape(kk * 2, n)
+
+
+def int4_matmul_ref(x8, wp, s_a, s_w, out_dtype=jnp.float32):
+    return int8_matmul_ref(x8, unpack_int4_ref(wp), s_a, s_w, out_dtype)
+
+
+def act_quant_ref(x, s, bits=8):
+    from ..core.quantizer import qrange
+    qmin, qmax = qrange(bits)
+    z = jnp.clip(jnp.round(x.astype(jnp.float32) / s), qmin, qmax)
+    return z.astype(jnp.int8)

@@ -1,0 +1,371 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the REAL step function (QAT train step with Adam,
+or the deployed-int serve step), lowers it with ShapeDtypeStruct inputs under
+the production mesh shardings, compiles, and records:
+
+  * memory_analysis()      — per-device bytes (proves the cell fits v5e HBM)
+  * cost_analysis()        — XLA's own (scan-body-once) numbers, for reference
+  * hlo_analysis.analyze() — trip-count-corrected per-device FLOPs / HBM bytes
+                             / collective bytes (EXPERIMENTS.md methodology)
+  * the three roofline terms + dominant bottleneck
+
+Results go to experiments/dryrun/<arch>__<shape>__<mesh>[__tag].json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-32b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+# TPU v5e hardware model (assignment constants)
+PEAK_FLOPS_BF16 = 197e12
+PEAK_FLOPS_INT8 = 394e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def _build_cell(arch: str, shape_name: str, mesh, *, policy_kind: str,
+                distill: bool, grad_mode: str, extra: dict):
+    """Returns (step_fn, in_specs_tree, in_shardings_tree, out_shardings)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from ..configs import SHAPES, get_config, input_specs, shape_applicable
+    from ..core.policy import QuantPolicy
+    from ..distributed.sharding import (batch_spec, param_specs,
+        safe_batch_spec, set_mesh_axis_sizes, state_specs)
+    from ..models import api
+    from ..models.transformer import lm_loss
+    from ..optim import adam_init, adam_update, linear_warmup_decay
+
+    cfg = get_config(arch)
+    if extra.get("attn_chunk"):
+        cfg = cfg.replace(attn_chunk=extra["attn_chunk"])
+    if extra.get("moe_group_size"):
+        cfg = cfg.replace(moe_group_size=extra["moe_group_size"])
+    if extra.get("remat") is not None:
+        cfg = cfg.replace(remat=bool(extra["remat"]))
+    if extra.get("attn_seq_shard"):
+        dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        cfg = cfg.replace(attn_seq_shard=True, dp_axes=dp)
+    if extra.get("fused_proj"):
+        cfg = cfg.replace(fused_proj=True)
+    if extra.get("moe_sorted"):
+        cfg = cfg.replace(moe_impl="sorted")
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return None, why
+
+    n_units = cfg.dec_layers if cfg.family == "encdec" else cfg.num_layers
+    if cfg.family in ("xlstm", "hybrid"):
+        per = cfg.slstm_every if cfg.family == "xlstm" else cfg.attn_every
+    k_int4 = {"mkq50": n_units // 2, "int8": 0, "int4": n_units}[policy_kind]
+
+    kv_dtype = jnp.dtype(extra.get("kv_dtype", "bfloat16"))
+    sh = lambda spec: NamedSharding(mesh, spec)
+    set_mesh_axis_sizes(mesh)
+    fsdp_axes = ()
+    if extra.get("fsdp"):
+        fsdp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    if shape.kind == "train":
+        policy = QuantPolicy(num_layers=n_units, mode="fake",
+                             last_k_int4=k_int4, grad_mode=grad_mode)
+        segments = api.segments_for(cfg, policy)
+        hp_lr = {"weights": 1e-5, "act_scale": 0.01, "weight_scale": 0.001}
+        sched = linear_warmup_decay(10000)
+        key = jax.random.PRNGKey(0)
+        params = jax.eval_shape(lambda k: api.init_model(cfg, k), key)
+        opt = jax.eval_shape(adam_init, params)
+        batch = input_specs(cfg, shape)
+
+        def model_inputs(b):
+            return {k: v for k, v in b.items() if k != "labels"}
+
+        n_micro = int(extra.get("microbatch") or 1)
+        teacher = None
+        t_segments = None
+        if distill:  # paper-faithful QAT step: fp teacher + MINI distillation
+            teacher = jax.eval_shape(lambda k: api.init_model(cfg, k),
+                                     jax.random.fold_in(key, 7))
+            t_segments = api.segments_for(cfg, None)
+
+        def grads_of(p, b, t=None):
+            def loss_fn(pp):
+                logits, _, taps_s, aux = api.forward(
+                    pp, cfg, segments, want_taps=distill, **model_inputs(b))
+                l_train = lm_loss(logits, b["labels"]) + aux
+                if not distill:
+                    return l_train
+                from ..core.distill import (combine_losses,
+                                            hidden_state_loss,
+                                            minilm_losses, output_loss)
+                t_logits, _, taps_t, _ = api.forward(
+                    t, cfg, t_segments, want_taps=True, **model_inputs(b))
+                taps_t = jax.lax.stop_gradient(taps_t)
+                l_out = output_loss(logits, jax.lax.stop_gradient(t_logits))
+                if taps_s is not None and "q" in taps_s:
+                    l_attn, l_val = minilm_losses(
+                        taps_s, taps_t, min(cfg.num_heads, 16))
+                else:
+                    l_attn = hidden_state_loss(taps_s["hidden"],
+                                               taps_t["hidden"])
+                    l_val = jnp.zeros(())
+                total, _ = combine_losses(l_train, l_out, l_attn, l_val)
+                return total
+            return jax.value_and_grad(loss_fn)(p)
+
+        def train_step(p, o, b, t=None):
+            if n_micro > 1:
+                # grad accumulation: microbatch i+1's compute overlaps the
+                # reduce of microbatch i (XLA latency-hiding scheduler).
+                # keep the batch dim sharded over DP after the micro reshape
+                mb = jax.tree.map(
+                    lambda a: jax.lax.with_sharding_constraint(
+                        a.reshape(n_micro, a.shape[0] // n_micro,
+                                  *a.shape[1:]),
+                        NamedSharding(mesh, batch_spec(mesh, a.ndim + 1,
+                                                       batch_axis=1))), b)
+
+                def micro(acc, bi):
+                    loss_i, g_i = jax.remat(grads_of)(p, bi, t)
+                    return (jax.tree.map(jnp.add, acc[0], g_i),
+                            acc[1] + loss_i), None
+
+                zero = jax.tree.map(
+                    lambda a: jnp.zeros(a.shape, jnp.float32), p)
+                (gsum, lsum), _ = jax.lax.scan(micro, (zero, 0.0), mb)
+                grads = jax.tree.map(lambda g: g / n_micro, gsum)
+                loss = lsum / n_micro
+            else:
+                loss, grads = grads_of(p, b, t)
+            new_p, new_o = adam_update(p, grads, o, lr_by_group=hp_lr,
+                                       schedule_fn=sched, grad_clip=1.0)
+            return new_p, new_o, loss
+
+        pspec = param_specs(params, fsdp_axes=fsdp_axes)
+        psh = jax.tree.map(lambda s: sh(s), pspec,
+                           is_leaf=lambda x: isinstance(x, P))
+        osh_mv = jax.tree.map(lambda s: sh(s), pspec,
+                              is_leaf=lambda x: isinstance(x, P))
+        from ..optim.adam import AdamState
+        osh = AdamState(step=sh(P()), m=osh_mv, v=jax.tree.map(
+            lambda s: s, osh_mv))
+        bsh = {k: sh(safe_batch_spec(mesh, v.shape)) for k, v in batch.items()}
+        if distill:
+            tsh = jax.tree.map(lambda s: sh(s), param_specs(teacher),
+                               is_leaf=lambda x: isinstance(x, P))
+            fn = jax.jit(train_step, in_shardings=(psh, osh, bsh, tsh),
+                         out_shardings=(psh, osh, None),
+                         donate_argnums=(0, 1))
+            return (fn, (params, opt, batch, teacher)), None
+        fn = jax.jit(train_step, in_shardings=(psh, osh, bsh),
+                     out_shardings=(psh, osh, None), donate_argnums=(0, 1))
+        return (fn, (params, opt, batch)), None
+
+    # ---------------- inference cells: deployed int path -------------------
+    policy = QuantPolicy(num_layers=n_units, mode="int",
+                         last_k_int4=k_int4, grad_mode=grad_mode)
+    segments = api.segments_for(cfg, policy)
+    key = jax.random.PRNGKey(0)
+
+    def make_int_params(k):
+        from ..core.qat import deploy_params
+        return deploy_params(api.init_model(cfg, k), cfg, segments)
+
+    params = jax.eval_shape(make_int_params, key)
+    pspec = param_specs(params)
+    psh = jax.tree.map(lambda s: sh(s), pspec,
+                       is_leaf=lambda x: isinstance(x, P))
+
+    if shape.kind == "prefill":
+        batch = input_specs(cfg, shape)
+
+        def prefill_step(p, b):
+            logits, _, _, _ = api.forward(p, cfg, segments, **b)
+            return logits
+
+        bsh = {k: sh(safe_batch_spec(mesh, v.shape)) for k, v in batch.items()}
+        fn = jax.jit(prefill_step, in_shardings=(psh, bsh),
+                     out_shardings=None)
+        return (fn, (params, batch)), None
+
+    # decode: one token against a cache of seq_len
+    B, S = shape.global_batch, shape.seq_len
+    state = api.decode_state(cfg, B, S, dtype=kv_dtype, as_specs=True)
+    ssh = jax.tree.map(lambda s: sh(s), state_specs(state, mesh),
+                       is_leaf=lambda x: isinstance(x, P))
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    tsh = sh(safe_batch_spec(mesh, (B, 1)))
+    extra_in = api.decode_extra_inputs(cfg, B, S, dtype=cfg.compute_dtype,
+                                       as_specs=True)
+    esh = {k: sh(safe_batch_spec(mesh, v.shape)) for k, v in extra_in.items()}
+
+    def serve_step(p, st, tok, ex):
+        logits, new_state, _, _ = api.forward(p, cfg, segments, state=st,
+                                              tokens=tok, **ex)
+        return logits, new_state
+
+    fn = jax.jit(serve_step, in_shardings=(psh, ssh, tsh, esh),
+                 out_shardings=(None, ssh), donate_argnums=(1,))
+    return (fn, (params, state, tokens, extra_in)), None
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+             policy_kind="mkq50", distill=False, grad_mode="mse",
+             tag="", extra=None) -> dict:
+    import jax
+    from .hlo_analysis import analyze
+    from .mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    built, skip = _build_cell(arch, shape_name, mesh, policy_kind=policy_kind,
+                              distill=distill, grad_mode=grad_mode,
+                              extra=extra or {})
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+              "chips": int(n_chips), "policy": policy_kind,
+              "grad_mode": grad_mode, "tag": tag}
+    if built is None:
+        result["status"] = "skipped"
+        result["reason"] = skip
+        _dump(result, out_dir)
+        return result
+    fn, specs = built
+    with mesh:
+        lowered = fn.lower(*specs)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    h = analyze(hlo)
+
+    terms = {
+        "compute_s": h["float_flops"] / PEAK_FLOPS_BF16
+        + h["int_flops"] / PEAK_FLOPS_INT8,
+        "memory_s": h["hbm_bytes"] / HBM_BW,
+        "collective_s": h["collective_bytes_total"] / ICI_BW,
+    }
+    dom = max(terms, key=terms.get)
+    result.update({
+        "status": "ok",
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "total_bytes": mem.argument_size_in_bytes + mem.temp_size_in_bytes,
+            "fits_16g": bool(mem.argument_size_in_bytes
+                             + mem.temp_size_in_bytes < 16e9),
+        },
+        "xla_cost_analysis": {k: cost.get(k) for k in
+                              ("flops", "bytes accessed", "transcendentals")},
+        "hlo_analysis": {k: h[k] for k in
+                         ("flops", "int_flops", "float_flops", "hbm_bytes",
+                          "collective_bytes", "collective_bytes_total",
+                          "hbm_by_mult")},
+        "top_collectives": h["top_collectives"],
+        "top_dots": h["top_dots"][:6],
+        "top_hbm": h["top_hbm"],
+        "roofline_terms_s": terms,
+        "dominant": dom,
+    })
+    _dump(result, out_dir)
+    return result
+
+
+def _dump(result: dict, out_dir: str):
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"__{result['tag']}" if result.get("tag") else ""
+    path = os.path.join(out_dir, f"{result['arch']}__{result['shape']}__"
+                                 f"{result['mesh']}{tag}.json")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    status = result["status"]
+    if status == "ok":
+        t = result["roofline_terms_s"]
+        print(f"[dryrun] {result['arch']} {result['shape']} {result['mesh']} "
+              f"OK compile={result['compile_s']}s "
+              f"mem={result['memory']['total_bytes']/1e9:.2f}GB "
+              f"compute={t['compute_s']*1e3:.2f}ms mem={t['memory_s']*1e3:.2f}ms "
+              f"coll={t['collective_s']*1e3:.2f}ms dom={result['dominant']}",
+              flush=True)
+    else:
+        print(f"[dryrun] {result['arch']} {result['shape']} {result['mesh']} "
+              f"{status}: {result.get('reason', '')}", flush=True)
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch")
+    p.add_argument("--shape")
+    p.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                        "both"])
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--out", default="experiments/dryrun")
+    p.add_argument("--policy", default="mkq50",
+                   choices=["mkq50", "int8", "int4"])
+    p.add_argument("--grad-mode", default="mse", choices=["mse", "ste"])
+    p.add_argument("--tag", default="")
+    p.add_argument("--kv-dtype", default="bfloat16")
+    p.add_argument("--attn-chunk", type=int, default=0)
+    p.add_argument("--moe-group-size", type=int, default=0)
+    p.add_argument("--remat", type=int, default=-1)
+    p.add_argument("--microbatch", type=int, default=0)
+    p.add_argument("--attn-seq-shard", action="store_true")
+    p.add_argument("--fsdp", action="store_true")
+    p.add_argument("--fused-proj", action="store_true")
+    p.add_argument("--distill", action="store_true")
+    p.add_argument("--moe-sorted", action="store_true")
+    args = p.parse_args(argv)
+
+    from ..configs import SHAPES
+    from ..configs.archs import ASSIGNED
+
+    extra = {"kv_dtype": args.kv_dtype, "attn_chunk": args.attn_chunk,
+             "moe_group_size": args.moe_group_size,
+             "remat": None if args.remat < 0 else args.remat,
+             "microbatch": args.microbatch,
+             "attn_seq_shard": args.attn_seq_shard,
+             "fsdp": args.fsdp, "fused_proj": args.fused_proj,
+             "moe_sorted": args.moe_sorted}
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        for a in ASSIGNED:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        cells.append((args.arch, args.shape))
+
+    failures = 0
+    for arch, shape in cells:
+        for mk in meshes:
+            try:
+                run_cell(arch, shape, mk, args.out, policy_kind=args.policy,
+                         grad_mode=args.grad_mode, tag=args.tag, extra=extra,
+                         distill=args.distill)
+            except Exception:
+                failures += 1
+                print(f"[dryrun] {arch} {shape} {mk} FAILED", flush=True)
+                traceback.print_exc()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

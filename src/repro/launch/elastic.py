@@ -1,0 +1,45 @@
+"""Elastic scaling: resume training on a different device count.
+
+On restart after node loss, the controller calls :func:`elastic_resume`:
+the checkpoint (device-agnostic npz) is loaded, a fresh (data, model) mesh is
+built from the LIVE device set (model-parallel degree preserved when the
+survivor count allows, else halved), and the global batch is re-split over
+the new data axis. Because checkpoints store full logical arrays (host
+shards), resharding is just placement under the new mesh — no format change.
+
+The DP-elastic contract: global batch stays FIXED (per-device microbatch
+grows), so optimizer hyperparameters remain valid across re-scales.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+
+from ..distributed.sharding import batch_spec, param_specs, shardings_for
+from .mesh import make_mesh_for_devices
+
+
+def elastic_resume(state_like, ckpt_manager, *, model_parallel: int = 0,
+                   devices=None):
+    """(state, step, mesh) from the latest checkpoint on the live devices."""
+    devices = devices if devices is not None else jax.devices()
+    mesh = make_mesh_for_devices(len(devices), model_parallel)
+    state, step = ckpt_manager.restore(state_like)
+    if state is None:
+        return None, None, mesh
+    shardings = shardings_for(state, mesh)
+    state = jax.device_put(state, shardings)
+    return state, step, mesh
+
+
+def rebalance_batch(global_batch: int, mesh) -> int:
+    """Per-host batch after a re-scale; raises if the batch can't split."""
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dp *= mesh.shape[a]
+    if global_batch % dp:
+        raise ValueError(f"global batch {global_batch} not divisible by "
+                         f"data parallelism {dp} after re-scale")
+    return global_batch // dp

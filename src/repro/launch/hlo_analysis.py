@@ -1,0 +1,373 @@
+"""Post-SPMD HLO text analysis: per-device FLOPs / bytes / collective bytes.
+
+Why not just ``compiled.cost_analysis()``? XLA's analysis counts a while-loop
+BODY ONCE, ignoring the trip count — and this framework scans over layers, so
+80-layer models would report ~1 layer of FLOPs. We therefore walk the HLO
+call graph ourselves:
+
+  * computations are parsed from ``compiled.as_text()`` (shapes at def sites),
+  * ``while`` ops carry ``known_trip_count`` in backend_config -> multiplier,
+  * fusions/calls propagate the enclosing multiplier,
+  * dot FLOPs = 2 x numel(result) x contraction extent (batch dims handled
+    by the result shape), scaled by the multiplier product,
+  * collective bytes = operand bytes per participating device, scaled (the
+    assignment's convention); all-reduce additionally x2 (reduce+broadcast
+    phases of ring/tree algorithms),
+  * HBM bytes = sum over top-level fusion/dot/copy/collective ops of
+    (operand + result bytes) — the standard "every fusion reads and writes
+    HBM once" roofline approximation.
+
+All numbers are PER DEVICE (the compiled module is the per-device program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "s2": 1, "u2": 1, "f8e4m3": 1,
+    "f8e5m2": 1, "f8e4m3fn": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*?)\s*([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of possibly-tuple HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str          # raw text after the opcode's '('
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list
+    defs: dict         # op name -> type string
+
+
+def parse_computations(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        mc = _COMP_RE.match(line.strip()) if line and not line.startswith(" ") \
+            else None
+        if mc and "{" in line:
+            cur = Computation(mc.group(1), [], {})
+            comps[cur.name] = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        mo = _OP_RE.match(line)
+        if mo:
+            name, type_str, opcode, rest = mo.groups()
+            cur.ops.append(Op(name, type_str, opcode, rest))
+            cur.defs[name] = type_str
+    return comps
+
+
+def _operand_names(rest: str) -> list[str]:
+    # operands are leading %name tokens before attribute list
+    head = rest.split("),", 1)[0]
+    return re.findall(r"%([\w.\-]+)", head)
+
+
+def _called(rest: str) -> list[tuple[str, float]]:
+    """(computation, extra multiplier) called by this op line."""
+    out = []
+    m = re.search(r'body=%?([\w.\-]+)', rest)
+    if m:
+        trip = 1.0
+        t = re.search(r'known_trip_count[":{]+n[": ]+(\d+)', rest)
+        if t:
+            trip = float(t.group(1))
+        out.append((m.group(1), trip))
+        c = re.search(r'condition=%?([\w.\-]+)', rest)
+        if c:
+            out.append((c.group(1), trip))
+        return out
+    m = re.search(r'calls=%?([\w.\-]+)', rest)
+    if m:
+        out.append((m.group(1), 1.0))
+    m = re.search(r'branch_computations=\{([^}]*)\}', rest)
+    if m:
+        for b in re.findall(r"%?([\w.\-]+)", m.group(1)):
+            out.append((b, 1.0))  # conditional: count every branch once
+    return out
+
+
+def _fusion_effective_bytes(op: "Op", comp: "Computation", comps: dict) -> int:
+    """HBM bytes actually moved by one fusion execution, slice-aware:
+
+    * a param consumed only by dynamic-slice reads the SLICE, not the buffer
+      (stacked layer weights indexed by the scan counter);
+    * a param consumed only as the dynamic-update-slice TARGET is aliased
+      in-place — the write is the UPDATE's bytes, not buffer + result
+      (scan's per-step stacking of carries/grads);
+    * everything else counts at face value.
+    """
+    m = re.search(r"calls=%?([\w.\-]+)", op.rest)
+    opnds = _operand_names(op.rest)
+    if not m or m.group(1) not in comps:
+        return _shape_bytes(op.type_str) + sum(
+            _shape_bytes(comp.defs.get(o, "")) for o in opnds)
+    fused = comps[m.group(1)]
+    _TRANSPARENT = ("convert", "bitcast", "copy", "reshape")
+    param_idx: dict[str, int] = {}
+    uses: dict[str, list] = {}
+    op_by_name = {fop.name: fop for fop in fused.ops}
+    for fop in fused.ops:
+        if fop.opcode == "parameter":
+            pm = re.match(r"\s*(\d+)", fop.rest)
+            if pm:
+                param_idx[fop.name] = int(pm.group(1))
+        for o in _operand_names(fop.rest):
+            uses.setdefault(o, []).append(fop)
+
+    def resolve(name: str) -> str:
+        """walk transparent-op chains back to their source op name."""
+        seen = 0
+        while name in op_by_name and op_by_name[name].opcode in _TRANSPARENT \
+                and seen < 20:
+            ops_ = _operand_names(op_by_name[name].rest)
+            if not ops_:
+                break
+            name = ops_[0]
+            seen += 1
+        return name
+
+    in_place_params: set[str] = set()
+    dus_update_bytes = 0
+    for fop in fused.ops:
+        if fop.opcode == "dynamic-update-slice":
+            o = _operand_names(fop.rest)
+            if o and resolve(o[0]) in param_idx:
+                in_place_params.add(resolve(o[0]))
+            if len(o) >= 2:
+                dus_update_bytes += _shape_bytes(fused.defs.get(o[1], ""))
+
+    def sink_kinds(name: str, depth=0) -> set:
+        """opcodes that ultimately consume ``name`` (through transparent ops)."""
+        out: set = set()
+        if depth > 20:
+            return out
+        for c in uses.get(name, []):
+            if c.opcode in _TRANSPARENT:
+                out |= sink_kinds(c.name, depth + 1)
+            else:
+                out.add(c.opcode)
+        return out
+
+    total = 0
+    for pname, idx in param_idx.items():
+        if idx >= len(opnds):
+            continue
+        if pname in in_place_params:
+            continue                       # aliased in-place buffer
+        kinds = sink_kinds(pname)
+        if kinds and kinds <= {"dynamic-slice"}:
+            slices = [c for c in fused.ops if c.opcode == "dynamic-slice"
+                      and resolve(_operand_names(c.rest)[0]) == pname]
+            total += sum(_shape_bytes(c.type_str) for c in slices)
+        else:
+            total += _shape_bytes(comp.defs.get(opnds[idx], ""))
+    if in_place_params:
+        total += 2 * dus_update_bytes      # read update + write slice
+    else:
+        total += _shape_bytes(op.type_str)
+    return total
+
+
+def _def_op(comp: "Computation", name: str) -> Optional["Op"]:
+    for o in comp.ops:
+        if o.name == name:
+            return o
+    return None
+
+
+def analyze(hlo: str, entry: Optional[str] = None) -> dict:
+    comps = parse_computations(hlo)
+    if entry is None:
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo, re.M)
+        entry = m.group(1) if m else next(iter(comps))
+
+    # accumulate multipliers per computation via DFS (call graph is a DAG)
+    mult: dict[str, float] = {entry: 1.0}
+    order = [entry]
+    seen = {entry}
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        for op in comp.ops:
+            for callee, extra in _called(op.rest):
+                if callee in comps:
+                    mult[callee] = mult.get(callee, 0.0) + mult[cname] * extra
+                    if callee not in seen:
+                        seen.add(callee)
+                        order.append(callee)
+
+    flops = 0.0
+    int_flops = 0.0     # int8 MXU path (s32 accumulators) — 2x bf16 peak
+    coll_bytes: dict[str, float] = {c: 0.0 for c in _COLLECTIVES}
+    hbm_bytes = 0.0
+    dots = []
+    colls = []
+    hbm_items = []
+    hbm_by_mult: dict[float, float] = {}
+
+    def _hbm(amount, op, cname, m):
+        nonlocal hbm_bytes
+        hbm_bytes += amount
+        hbm_by_mult[m] = hbm_by_mult.get(m, 0.0) + amount
+        hbm_items.append((amount, f"{op.opcode}:{op.name}", cname, m))
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        # consumers map: converts feeding ONLY dynamic-slices are charged at
+        # the slice size (the CPU backend hoists bf16->f32 converts of whole
+        # stacked caches above the per-layer slice; TPU sinks them below).
+        consumers: dict[str, list] = {}
+        for op in comp.ops:
+            for o in _operand_names(op.rest):
+                consumers.setdefault(o, []).append(op)
+        for op in comp.ops:
+            if op.opcode == "dot":
+                opnds = _operand_names(op.rest)
+                lhs_t = comp.defs.get(opnds[0], "") if opnds else ""
+                cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+                contr = 1
+                if cd and lhs_t:
+                    dims_m = _SHAPE_RE.search(lhs_t)
+                    if dims_m:
+                        dims = [int(x) for x in dims_m.group(2).split(",") if x]
+                        for ci in cd.group(1).split(","):
+                            if ci:
+                                contr *= dims[int(ci)]
+                f = 2.0 * _shape_elems(op.type_str) * contr * m
+                flops += f
+                is_int = op.type_str.strip().startswith(("s32", "s16", "s8",
+                                                         "u32"))
+                if is_int:
+                    int_flops += f
+                dots.append({"name": op.name, "flops": f, "mult": m,
+                             "out": op.type_str.strip()})
+                # TPU dtype model: the CPU backend upcasts bf16 matmuls to
+                # f32; on the TPU target float matmul operands stream at
+                # 2 B/elem (bf16, f32 accumulation in VREGs). Int dots keep
+                # their integer widths.
+                b = 0
+                for o in opnds:
+                    ts = comp.defs.get(o, "")
+                    ob = _shape_bytes(ts)
+                    if not is_int and ts.strip().startswith(("f32", "f64")):
+                        ob //= 2
+                    b += ob
+                b += (_shape_bytes(op.type_str) // (1 if is_int else 2))
+                _hbm(m * b, op, cname, m)
+            elif op.opcode in _COLLECTIVES:
+                opnds = _operand_names(op.rest)
+                b = sum(_shape_bytes(comp.defs.get(o, "")) for o in opnds)
+                factor = 2.0 if op.opcode == "all-reduce" else 1.0
+                coll_bytes[op.opcode] += b * factor * m
+                colls.append({"op": op.opcode, "bytes": b, "mult": m,
+                              "name": op.name})
+                _hbm(m * (_shape_bytes(op.type_str) + b), op, cname, m)
+            elif op.opcode == "dynamic-update-slice":
+                # in-place update: traffic = read + write of the UPDATE slice
+                # (counting the full buffer would charge stacked-grad scatter
+                # inside scan bodies L x full-stack bytes — wrong).
+                opnds = _operand_names(op.rest)
+                if len(opnds) >= 2:
+                    _hbm(m * 2 * _shape_bytes(comp.defs.get(opnds[1], "")),
+                         op, cname, m)
+            elif op.opcode in ("dynamic-slice", "gather"):
+                # reads only the slice it produces
+                _hbm(m * 2 * _shape_bytes(op.type_str), op, cname, m)
+            elif op.opcode == "fusion":
+                _hbm(m * _fusion_effective_bytes(op, comp, comps), op, cname, m)
+            elif op.opcode in ("copy", "custom-call", "reduce", "convert",
+                               "transpose", "concatenate", "sort", "scatter"):
+                opnds = _operand_names(op.rest)
+                cons = consumers.get(op.name, [])
+                if op.opcode in ("convert", "copy", "transpose") and cons and \
+                        all(c.opcode == "dynamic-slice" for c in cons):
+                    _hbm(m * 2 * sum(_shape_bytes(c.type_str) for c in cons),
+                         op, cname, m)
+                elif op.opcode in ("convert", "copy") and cons and all(
+                        c.opcode == "dynamic-update-slice"
+                        and _operand_names(c.rest)[:1] == [op.name]
+                        for c in cons):
+                    pass  # dtype-wrapper around an in-place cache update:
+                    # the CPU backend emulates bf16 by f32-converting the
+                    # whole buffer; TPU aliases it. DUS itself is charged.
+                elif op.opcode in ("convert", "copy") and any(
+                        comp.defs.get(o, "") and src.opcode ==
+                        "dynamic-update-slice"
+                        for o in _operand_names(op.rest)[:1]
+                        for src in [_def_op(comp, o)] if src is not None):
+                    pass  # convert-back of the DUS result (same pattern)
+                elif op.opcode == "convert" and cons and all(
+                        c.opcode == "dot" for c in cons):
+                    pass  # CPU-only f32 upcast feeding a matmul: the TPU
+                    # target runs the dot in bf16; read charged at the dot
+                else:
+                    _hbm(m * (_shape_bytes(op.type_str) + sum(
+                        _shape_bytes(comp.defs.get(o, "")) for o in opnds)),
+                        op, cname, m)
+    return {
+        "flops": flops,
+        "int_flops": int_flops,
+        "float_flops": flops - int_flops,
+        "hbm_bytes": hbm_bytes,
+        "collective_bytes": coll_bytes,
+        "collective_bytes_total": sum(coll_bytes.values()),
+        "top_dots": sorted(dots, key=lambda d: -d["flops"])[:12],
+        "top_hbm": [{"bytes": b, "op": o, "comp": c, "mult": mm}
+                    for b, o, c, mm in sorted(hbm_items, reverse=True)[:12]],
+        "hbm_by_mult": {str(int(k)): v for k, v in
+                        sorted(hbm_by_mult.items())},
+        "top_collectives": sorted(colls, key=lambda c: -c["bytes"] * c["mult"])[:12],
+        "n_computations": len(comps),
+    }

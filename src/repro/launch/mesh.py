@@ -1,0 +1,29 @@
+"""Production mesh builders (dry-run target: TPU v5e, 256 chips/pod).
+
+A FUNCTION, not a module constant: importing this module never touches jax
+device state (jax locks the device count on first backend init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_for_devices(n_devices: int, model_parallel: int = 0):
+    """Elastic variant: whatever devices are alive -> (data, model) mesh.
+
+    Used by the restart path when a pod comes back with fewer hosts
+    (launch/elastic.py): model parallelism is preserved if possible, the
+    data axis absorbs the change.
+    """
+    if model_parallel <= 0:
+        model_parallel = min(16, n_devices)
+    while n_devices % model_parallel:
+        model_parallel //= 2
+    return jax.make_mesh((n_devices // model_parallel, model_parallel),
+                         ("data", "model"))

@@ -1,0 +1,2 @@
+from . import (api, attention, bert, encdec, hybrid, layers, mamba2,  # noqa: F401
+               transformer, xlstm)

@@ -1,0 +1,93 @@
+"""Family-dispatching model API: init / forward / decode-state for every arch.
+
+forward(...) -> (logits, new_state, taps, aux_loss) uniformly across families,
+so train/serve/dryrun drivers are architecture-agnostic.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..core.policy import QuantPolicy
+from .layers import QuantSpec
+from . import encdec, hybrid, transformer, xlstm
+
+
+def segments_for(cfg: ModelConfig, policy: Optional[QuantPolicy],
+                 use_pallas: bool = False):
+    if policy is None:
+        n = _segment_units(cfg)
+        return [(0, n, QuantSpec())]
+    if cfg.family in ("xlstm", "hybrid"):
+        per = cfg.slstm_every if cfg.family == "xlstm" else cfg.attn_every
+        return hybrid.group_segments(policy, cfg.num_layers // per, use_pallas)
+    if cfg.family == "encdec":
+        # segments over decoder layers
+        assert policy.num_layers == cfg.dec_layers, \
+            f"encdec policy covers decoder layers ({cfg.dec_layers})"
+    return transformer.segments_from_policy(policy, use_pallas)
+
+
+def _segment_units(cfg: ModelConfig) -> int:
+    if cfg.family == "xlstm":
+        return cfg.num_layers // cfg.slstm_every
+    if cfg.family == "hybrid":
+        return cfg.num_layers // cfg.attn_every
+    if cfg.family == "encdec":
+        return cfg.dec_layers
+    return cfg.num_layers
+
+
+def init_model(cfg: ModelConfig, key) -> dict:
+    if cfg.family == "xlstm":
+        return xlstm.init_xlstm(cfg, key)
+    if cfg.family == "hybrid":
+        return hybrid.init_hybrid(cfg, key)
+    if cfg.family == "encdec":
+        return encdec.init_encdec(cfg, key)
+    return transformer.init_lm(cfg, key)
+
+
+def forward(params, cfg: ModelConfig, segments, *, state=None,
+            want_taps: bool = False, **inputs):
+    """inputs: tokens / src_embeds / patch_embeds / patch_mask / enc_out."""
+    if cfg.family == "xlstm":
+        return xlstm.xlstm_forward(params, cfg, segments, states=state,
+                                   want_taps=want_taps, **inputs)
+    if cfg.family == "hybrid":
+        return hybrid.hybrid_forward(params, cfg, segments, states=state,
+                                     want_taps=want_taps, **inputs)
+    if cfg.family == "encdec":
+        return encdec.encdec_forward(params, cfg, segments, caches=state,
+                                     want_taps=want_taps, **inputs)
+    return transformer.lm_forward(params, cfg, segments, caches=state,
+                                  want_taps=want_taps, **inputs)
+
+
+def decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                 dtype=jnp.bfloat16, as_specs: bool = False):
+    if cfg.family == "xlstm":
+        return xlstm.xlstm_states(cfg, batch, as_specs=as_specs)
+    if cfg.family == "hybrid":
+        return hybrid.hybrid_states(cfg, batch, max_len, dtype, as_specs)
+    if cfg.family == "encdec":
+        L = cfg.dec_layers
+        mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if as_specs else (
+            lambda s, d: jnp.zeros(s, d))
+        return {"k": mk((L, batch, max_len, cfg.num_kv_heads, cfg.hd), dtype),
+                "v": mk((L, batch, max_len, cfg.num_kv_heads, cfg.hd), dtype),
+                "len": mk((), jnp.int32)}
+    return transformer.lm_caches(cfg, batch, max_len, dtype, as_specs)
+
+
+def decode_extra_inputs(cfg: ModelConfig, batch: int, src_len: int,
+                        dtype=jnp.bfloat16, as_specs: bool = False) -> dict:
+    """Family-specific extra decode inputs (enc-dec needs encoder output)."""
+    if cfg.family == "encdec":
+        mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if as_specs else (
+            lambda s, d: jnp.zeros(s, d))
+        return {"enc_out": mk((batch, src_len, cfg.d_model), dtype)}
+    return {}

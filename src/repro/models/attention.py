@@ -1,0 +1,239 @@
+"""GQA multi-head attention: full / chunked(flash-style) / KV-cache decode.
+
+All projections route through ``qlinear`` (quantizable per the MKQ policy);
+softmax is computed in fp32 (paper §5). Chunked attention is the jnp flash
+pattern (scan over query blocks, running max/denominator) used for long
+sequences where the (S, S) score tensor would not fit.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import QuantSpec, apply_rope, init_linear, qlinear, rope_tables
+
+NEG_INF = -2.0e38
+KV_QUANT_SCALE = 1.0 / 16.0   # static int8 KV-cache scale (post-norm k/v are
+                              # O(1); calibratable per-head in deployment)
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv: int, hd: int,
+                   qkv_bias: bool, out_bias: bool, stacked: int | None = None,
+                   dtype=jnp.float32, fused: bool = False) -> dict:
+    ks = jax.random.split(key, 4)
+    if fused:
+        # one matmul + ONE backward-dx all-reduce instead of three (SS Perf)
+        return {
+            "wqkv": init_linear(ks[0], d_model, (n_heads + 2 * n_kv) * hd,
+                                qkv_bias, stacked, dtype),
+            "wo": init_linear(ks[3], n_heads * hd, d_model, out_bias,
+                              stacked, dtype),
+        }
+    return {
+        "wq": init_linear(ks[0], d_model, n_heads * hd, qkv_bias, stacked, dtype),
+        "wk": init_linear(ks[1], d_model, n_kv * hd, qkv_bias, stacked, dtype),
+        "wv": init_linear(ks[2], d_model, n_kv * hd, qkv_bias, stacked, dtype),
+        "wo": init_linear(ks[3], n_heads * hd, d_model, out_bias, stacked, dtype),
+    }
+
+
+def _split_heads(x: jax.Array, n: int) -> jax.Array:
+    B, S, _ = x.shape
+    return x.reshape(B, S, n, -1)
+
+
+def _repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    if groups == 1:
+        return k
+    return jnp.repeat(k, groups, axis=2)
+
+
+def full_attention(q, k, v, *, causal: bool, q_offset=0,
+                   kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """q: (B,Sq,H,dh), k/v: (B,Skv,H,dh) -> (B,Sq,H,dh). fp32 softmax."""
+    dh = q.shape[-1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(dh))
+    Sq, Skv = q.shape[1], k.shape[1]
+    if causal:
+        qi = jnp.arange(Sq)[:, None] + q_offset
+        ki = jnp.arange(Skv)[None, :]
+        scores = jnp.where((ki <= qi)[None, None], scores, NEG_INF)
+    if kv_len is not None:  # mask cache positions beyond current length
+        valid = jnp.arange(Skv)[None, None, None, :] < kv_len
+        scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(q.dtype), v)
+
+
+def chunked_attention(q, k, v, *, causal: bool, chunk: int,
+                      skip_masked_blocks: bool = True,
+                      seq_shard_axes=None) -> jax.Array:
+    """Flash-style: scan over query blocks; online softmax over KV blocks.
+
+    ``seq_shard_axes``: (dp_axes, model_axis) — context-parallel mode for
+    archs whose head count doesn't divide the TP axis (e.g. 40 heads on 16):
+    each query block's ROW dim is sharded over 'model' (k/v replicated per
+    block), so the online-softmax inner loop is fully local — without this,
+    GSPMD emits a per-KV-step accumulator all-reduce (EXPERIMENTS.md §Perf).
+    """
+    B, S, H, dh = q.shape
+    nq = S // chunk
+    assert S % chunk == 0, (S, chunk)
+    qb = q.reshape(B, nq, chunk, H, dh).transpose(1, 0, 2, 3, 4)
+    kb = k.reshape(B, nq, chunk, H, dh).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nq, chunk, H, dh).transpose(1, 0, 2, 3, 4)
+    if seq_shard_axes is not None:
+        from jax.sharding import PartitionSpec as PS
+        dp, tp = seq_shard_axes
+        qb = jax.lax.with_sharding_constraint(
+            qb, PS(None, dp, tp, None, None))
+        kb = jax.lax.with_sharding_constraint(
+            kb, PS(None, dp, None, None, None))
+        vb = jax.lax.with_sharding_constraint(
+            vb, PS(None, dp, None, None, None))
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+
+    def q_block(qi, q_i):
+        # online softmax state
+        m = jnp.full((B, H, chunk), NEG_INF, jnp.float32)
+        l = jnp.zeros((B, H, chunk), jnp.float32)
+        acc = jnp.zeros((B, chunk, H, dh), jnp.float32)
+
+        def kv_step(carry, inputs):
+            m, l, acc = carry
+            ki, k_j, v_j = inputs
+            s = jnp.einsum("bqhd,bkhd->bhqk", q_i, k_j).astype(jnp.float32) * scale
+            if causal:
+                qpos = qi * chunk + jnp.arange(chunk)[:, None]
+                kpos = ki * chunk + jnp.arange(chunk)[None, :]
+                s = jnp.where((kpos <= qpos)[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr.transpose(0, 2, 1)[..., None] + jnp.einsum(
+                "bhqk,bkhd->bqhd", p, v_j.astype(jnp.float32))
+            if causal and skip_masked_blocks:
+                # blocks strictly after the query block are fully masked: skip.
+                keep = ki <= qi
+                m_new = jnp.where(keep, m_new, m)
+                l_new = jnp.where(keep, l_new, l)
+                acc_new = jnp.where(keep, acc_new, acc)
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m, l, acc), (jnp.arange(nq), kb, vb))
+        out = acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+        return out.astype(q.dtype)
+
+    out_blocks = jax.lax.map(lambda args: q_block(*args),
+                             (jnp.arange(nq), qb))
+    return out_blocks.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dh)
+
+
+def cached_decode_attention(q, k_cache, v_cache, k_new, v_new, length):
+    """Decode attention: q (B,Sq,H,dh) over cache (B,Smax,H,dh) masked to
+    ``length`` plus Sq new tokens (causal among themselves). fp32 softmax."""
+    B, Sq, H, dh = q.shape
+    Smax = k_cache.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    s1 = jnp.einsum("bqhd,bkhd->bhqk", q, k_cache).astype(jnp.float32) * scale
+    valid = jnp.arange(Smax)[None, None, None, :] < length
+    s1 = jnp.where(valid, s1, NEG_INF)
+    s2 = jnp.einsum("bqhd,bkhd->bhqk", q, k_new).astype(jnp.float32) * scale
+    if Sq > 1:
+        qi = jnp.arange(Sq)[:, None]
+        ki = jnp.arange(Sq)[None, :]
+        s2 = jnp.where((ki <= qi)[None, None], s2, NEG_INF)
+    s = jax.nn.softmax(jnp.concatenate([s1, s2], axis=-1), axis=-1)
+    p1, p2 = s[..., :Smax].astype(q.dtype), s[..., Smax:].astype(q.dtype)
+    return (jnp.einsum("bhqk,bkhd->bqhd", p1, v_cache)
+            + jnp.einsum("bhqk,bkhd->bqhd", p2, v_new))
+
+
+def attention_block(x: jax.Array, p: dict, *, n_heads: int, n_kv: int, hd: int,
+                    spec: QuantSpec, causal: bool = True, rope: bool = True,
+                    rope_theta: float = 10000.0,
+                    positions: Optional[jax.Array] = None,
+                    cache: Optional[dict] = None,
+                    kv_input: Optional[jax.Array] = None,
+                    chunk: int = 0,
+                    seq_shard_axes=None,
+                    want_taps: bool = False):
+    """One attention sublayer (pre-norm residual handled by caller).
+
+    cache: {'k': (B, S_max, n_kv, hd), 'v': ..., 'len': ()} -> decode mode.
+    kv_input: cross-attention source (enc-dec); keys/values from this tensor.
+    Returns (out, new_cache, taps).
+    """
+    B, Sq, _ = x.shape
+    src = x if kv_input is None else kv_input
+    if "wqkv" in p:
+        qkv = qlinear(x, p["wqkv"], spec)
+        q, k, v = jnp.split(qkv, [n_heads * hd, (n_heads + n_kv) * hd], -1)
+        q = _split_heads(q, n_heads)
+        k = _split_heads(k, n_kv)
+        v = _split_heads(v, n_kv)
+    else:
+        q = _split_heads(qlinear(x, p["wq"], spec), n_heads)
+        k = _split_heads(qlinear(src, p["wk"], spec), n_kv)
+        v = _split_heads(qlinear(src, p["wv"], spec), n_kv)
+    taps = None
+    if want_taps:
+        taps = {"q": q.reshape(B, Sq, -1), "k": k.reshape(B, k.shape[1], -1),
+                "v": v.reshape(B, v.shape[1], -1)}
+
+    if positions is None:
+        offset = cache["len"] if cache is not None else 0
+        positions = jnp.arange(Sq)[None, :] + offset
+    if rope and kv_input is None:
+        cos, sin = rope_tables(positions, hd, rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    new_cache = None
+    groups = n_heads // n_kv
+    if cache is not None:
+        # decode: attend over [cache (masked to len), new tokens] at the
+        # SCORE level — the cache tensor is only read; the caller writes the
+        # (B, Sq, Hkv, dh) new-token k/v at position ``len`` (one small DUS
+        # instead of a full-cache copy per layer).
+        if cache["k"].dtype == jnp.int8:   # quantized KV cache (SS Perf)
+            kk_c = _repeat_kv(cache["k"].astype(q.dtype) * KV_QUANT_SCALE,
+                              groups)
+            vv_c = _repeat_kv(cache["v"].astype(q.dtype) * KV_QUANT_SCALE,
+                              groups)
+        else:
+            kk_c = _repeat_kv(cache["k"].astype(q.dtype), groups)
+            vv_c = _repeat_kv(cache["v"].astype(q.dtype), groups)
+        kk_n = _repeat_kv(k, groups)
+        vv_n = _repeat_kv(v, groups)
+        out = cached_decode_attention(q, kk_c, vv_c, kk_n, vv_n,
+                                      cache["len"])
+        new_cache = (k, v)
+    else:
+        kk, vv = _repeat_kv(k, groups), _repeat_kv(v, groups)
+        if chunk and Sq > chunk and Sq % chunk == 0 and kv_input is None:
+            out = chunked_attention(q, kk, vv, causal=causal, chunk=chunk,
+                                    seq_shard_axes=seq_shard_axes)
+        else:
+            out = full_attention(q, kk, vv, causal=causal and kv_input is None)
+    out = out.reshape(B, Sq, n_heads * hd)
+    return qlinear(out, p["wo"], spec), new_cache, taps
+
+
+def init_cache(batch: int, max_len: int, n_kv: int, hd: int,
+               dtype=jnp.bfloat16) -> dict:
+    return {"k": jnp.zeros((batch, max_len, n_kv, hd), dtype),
+            "v": jnp.zeros((batch, max_len, n_kv, hd), dtype),
+            "len": jnp.zeros((), jnp.int32)}
+
+
+def cache_specs(batch: int, max_len: int, n_kv: int, hd: int,
+                dtype=jnp.bfloat16) -> dict:
+    return {"k": jax.ShapeDtypeStruct((batch, max_len, n_kv, hd), dtype),
+            "v": jax.ShapeDtypeStruct((batch, max_len, n_kv, hd), dtype),
+            "len": jax.ShapeDtypeStruct((), jnp.int32)}

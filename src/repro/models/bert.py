@@ -1,0 +1,77 @@
+"""BERT/TinyBERT encoder + classification head — the paper's own models.
+
+TinyBERT4 (Jiao et al. 2019): L=4, d_h=312, d_i=1200, 12 heads — the student
+quantized in Table 1. BERT-base is available as a (deeper) teacher. Built on
+the shared transformer stack with post-LN, learned positions, GELU FFN,
+bidirectional attention.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .transformer import init_lm, scan_layers
+
+
+def tinybert_config(num_classes: int = 2, layers=4, d=312, heads=12,
+                    d_ff=1200, vocab=30522, name="tinybert4") -> ModelConfig:
+    return ModelConfig(
+        name=name, family="bert", num_layers=layers, d_model=d,
+        num_heads=heads, num_kv_heads=heads, d_ff=d_ff, vocab_size=vocab,
+        qkv_bias=True, out_bias=True, norm="ln", act="gelu", rope=False,
+        causal=False, learned_pos=True, dtype="float32", remat=False)
+
+
+def init_bert_classifier(cfg: ModelConfig, num_classes: int, key) -> dict:
+    ks = jax.random.split(key, 3)
+    params = init_lm(cfg, ks[0])
+    params.pop("lm_head", None)  # classification head instead
+    params["pooler"] = {"w": jax.random.normal(ks[1], (cfg.d_model, cfg.d_model)) * 0.02,
+                        "b": jnp.zeros((cfg.d_model,))}
+    params["classifier"] = {"w": jax.random.normal(ks[2], (cfg.d_model, num_classes)) * 0.02,
+                            "b": jnp.zeros((num_classes,))}
+    return params
+
+
+def bert_encode(params, cfg: ModelConfig, segments, tokens,
+                want_taps: bool = False):
+    """Final hidden states (B, S, d) + taps, via the shared stack."""
+    from .transformer import _embed, _norm, _slice_stack, block_apply
+
+    x = _embed(params, cfg, tokens)
+    layers = params["layers"]
+    presliced = isinstance(layers, (list, tuple))
+    taps = None
+    for si, (start, end, spec) in enumerate(segments):
+        is_last = si == len(segments) - 1
+        n_scan = end - start - (1 if (want_taps and is_last) else 0)
+        seg_full = layers[si] if presliced else _slice_stack(layers, start, end)
+        seg = _slice_stack(seg_full, 0, n_scan)
+
+        def body(carry, lp):
+            h, _, _, _ = block_apply(carry, lp, cfg, spec)
+            return h, None
+
+        if n_scan > 0:
+            x, _ = scan_layers(body, x, seg)
+        if want_taps and is_last:
+            lp = jax.tree.map(lambda a: a[-1], seg_full)
+            x, _, taps, _ = block_apply(x, lp, cfg, spec, want_taps=True)
+    x = _norm(x, params["final_norm"], cfg.norm)
+    return x, taps
+
+
+def bert_classify_logits(params, cfg: ModelConfig, segments, tokens,
+                         want_taps: bool = False):
+    h, taps = bert_encode(params, cfg, segments, tokens, want_taps)
+    pooled = jnp.tanh(h[:, 0].astype(jnp.float32) @ params["pooler"]["w"]
+                      + params["pooler"]["b"])
+    logits = pooled @ params["classifier"]["w"] + params["classifier"]["b"]
+    return logits, taps
+
+
+def classification_loss(logits, labels):
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], -1)[:, 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,175 @@
+"""Encoder-decoder backbone (Seamless-M4T medium shape).
+
+The modality frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings (B, S_src, d_model) for the encoder. The decoder
+is a standard causal stack with cross-attention; decode shapes exercise the
+decoder with a cached self-attn KV and cached cross-attn K/V (computed once
+from the encoder output at prefill).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .attention import attention_block, init_attention
+from .layers import QuantSpec, init_norm, qlinear
+from .transformer import (_norm, _slice_stack, ffn_apply, init_ffn,
+                           mask_padded_vocab, scan_layers)
+
+
+def init_encdec(cfg: ModelConfig, key) -> dict:
+    ks = jax.random.split(key, 9)
+    d = cfg.d_model
+    enc_block = {
+        "ln1": init_norm(ks[0], d, cfg.norm, cfg.enc_layers),
+        "attn": init_attention(ks[1], d, cfg.num_heads, cfg.num_kv_heads,
+                               cfg.hd, cfg.qkv_bias, cfg.out_bias,
+                               cfg.enc_layers),
+        "ln2": init_norm(ks[2], d, cfg.norm, cfg.enc_layers),
+        "ffn": init_ffn(ks[3], cfg, cfg.enc_layers),
+    }
+    dec_block = {
+        "ln1": init_norm(ks[4], d, cfg.norm, cfg.dec_layers),
+        "self": init_attention(ks[5], d, cfg.num_heads, cfg.num_kv_heads,
+                               cfg.hd, cfg.qkv_bias, cfg.out_bias,
+                               cfg.dec_layers),
+        "ln2": init_norm(ks[4], d, cfg.norm, cfg.dec_layers),
+        "cross": init_attention(ks[6], d, cfg.num_heads, cfg.num_kv_heads,
+                                cfg.hd, cfg.qkv_bias, cfg.out_bias,
+                                cfg.dec_layers),
+        "ln3": init_norm(ks[4], d, cfg.norm, cfg.dec_layers),
+        "ffn": init_ffn(ks[7], cfg, cfg.dec_layers),
+    }
+    return {
+        "embed": jax.random.normal(ks[8], (cfg.padded_vocab, d)) * 0.02,
+        "enc": enc_block,
+        "dec": dec_block,
+        "enc_norm": init_norm(ks[0], d, cfg.norm),
+        "final_norm": init_norm(ks[0], d, cfg.norm),
+        "lm_head": jax.random.normal(
+            jax.random.fold_in(ks[8], 1), (d, cfg.padded_vocab)) * 0.02,
+    }
+
+
+def _enc_block(x, p, cfg, spec):
+    a, _, _ = attention_block(
+        _norm(x, p["ln1"], cfg.norm), p["attn"], n_heads=cfg.num_heads,
+        n_kv=cfg.num_kv_heads, hd=cfg.hd, spec=spec, causal=False,
+        rope=cfg.rope, rope_theta=cfg.rope_theta,
+        chunk=cfg.attn_chunk if x.shape[1] > cfg.attn_chunk_threshold else 0)
+    x = x + a
+    return x + ffn_apply(_norm(x, p["ln2"], cfg.norm), p["ffn"], cfg, spec)
+
+
+def _dec_block(x, enc_out, p, cfg, spec, cache=None, cross_kv=None,
+               want_taps=False):
+    a, new_cache, taps = attention_block(
+        _norm(x, p["ln1"], cfg.norm), p["self"], n_heads=cfg.num_heads,
+        n_kv=cfg.num_kv_heads, hd=cfg.hd, spec=spec, causal=True,
+        rope=cfg.rope, rope_theta=cfg.rope_theta, cache=cache,
+        chunk=cfg.attn_chunk if x.shape[1] > cfg.attn_chunk_threshold else 0,
+        want_taps=want_taps)
+    x = x + a
+    c, _, _ = attention_block(
+        _norm(x, p["ln2"], cfg.norm), p["cross"], n_heads=cfg.num_heads,
+        n_kv=cfg.num_kv_heads, hd=cfg.hd, spec=spec, causal=False,
+        rope=False, kv_input=enc_out, cache=None)
+    x = x + c
+    x = x + ffn_apply(_norm(x, p["ln3"], cfg.norm), p["ffn"], cfg, spec)
+    return x, new_cache, taps
+
+
+def encdec_forward(params, cfg: ModelConfig, segments, *, tokens=None,
+                   src_embeds=None, enc_out=None, caches=None,
+                   want_taps: bool = False, **_unused):
+    """Train/prefill: src_embeds + tokens. Decode: tokens (B,1) + caches + enc_out.
+
+    Segments apply to the DECODER stack (the quantization-sensitive, deployed
+    half); the encoder uses the first segment's spec uniformly.
+    """
+    enc_spec = segments[0][2]
+    presliced = isinstance(params["dec"], (list, tuple))
+    if enc_out is None:
+        h = src_embeds.astype(cfg.compute_dtype)
+
+        def enc_body(carry, lp):
+            return _enc_block(carry, lp, cfg, enc_spec), None
+        body = jax.checkpoint(enc_body) if cfg.remat else enc_body
+        h, _ = scan_layers(body, h, params["enc"])
+        enc_out = _norm(h, params["enc_norm"], cfg.norm)
+
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    taps = None
+    for si, (start, end, spec) in enumerate(segments):
+        is_last = si == len(segments) - 1
+        n_scan = end - start - (1 if (want_taps and is_last) else 0)
+        seg_full = (params["dec"][si] if presliced
+                    else _slice_stack(params["dec"], start, end))
+        seg = _slice_stack(seg_full, 0, n_scan)
+
+        def write_new_kv(cs, idx, new_kv):
+            k_new, v_new = new_kv
+            start = (idx, 0, cs["len"], 0, 0)
+            from .transformer import _to_cache
+            return {
+                "k": jax.lax.dynamic_update_slice(
+                    cs["k"], _to_cache(k_new, cs["k"].dtype)[None], start),
+                "v": jax.lax.dynamic_update_slice(
+                    cs["v"], _to_cache(v_new, cs["v"].dtype)[None], start),
+                "len": cs["len"],
+            }
+
+        def body(carry, xs):
+            if caches is not None:
+                # caches ride the carry: read layer slice, write one token
+                h, cs = carry
+                lp, idx = xs
+                cache_l = {
+                    "k": jax.lax.dynamic_index_in_dim(cs["k"], idx, 0, False),
+                    "v": jax.lax.dynamic_index_in_dim(cs["v"], idx, 0, False),
+                    "len": cs["len"],
+                }
+                h2, nc, _ = _dec_block(h, enc_out, lp, cfg, spec,
+                                       cache=cache_l)
+                return (h2, write_new_kv(cs, idx, nc)), None
+            h2, _, _ = _dec_block(carry, enc_out, xs, cfg, spec)
+            return h2, None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        if n_scan > 0:
+            if caches is not None:
+                idxs = jnp.arange(start, start + n_scan)
+                (x, caches), _ = jax.lax.scan(body, (x, caches), (seg, idxs))
+            else:
+                x, _ = scan_layers(body, x, seg)
+        if want_taps and is_last:
+            lp = jax.tree.map(lambda a: a[-1], seg_full)
+            cache_l = None
+            if caches is not None:
+                cache_l = {"k": caches["k"][end - 1],
+                           "v": caches["v"][end - 1], "len": caches["len"]}
+            x, nc, taps = _dec_block(x, enc_out, lp, cfg, spec, cache=cache_l,
+                                     want_taps=True)
+            if caches is not None:
+                k_new, v_new = nc
+                start = (end - 1, 0, caches["len"], 0, 0)
+                from .transformer import _to_cache
+                caches = {
+                    "k": jax.lax.dynamic_update_slice(
+                        caches["k"], _to_cache(k_new, caches["k"].dtype)[None],
+                        start),
+                    "v": jax.lax.dynamic_update_slice(
+                        caches["v"], _to_cache(v_new, caches["v"].dtype)[None],
+                        start),
+                    "len": caches["len"]}
+
+    new_caches = None
+    if caches is not None:
+        new_caches = {**caches, "len": caches["len"] + x.shape[1]}
+    x = _norm(x, params["final_norm"], cfg.norm)
+    logits = mask_padded_vocab(x @ params["lm_head"].astype(x.dtype), cfg)
+    return logits, new_caches, taps, jnp.zeros((), jnp.float32)

@@ -1,0 +1,187 @@
+"""Zamba2-style hybrid stack: Mamba2 backbone + ONE shared attention block.
+
+The shared attention+FFN block (a single weight set) is invoked after every
+``attn_every``-th Mamba2 layer (arXiv:2411.15242). We therefore structure the
+stack as ``G = L / attn_every`` groups; a group = ``attn_every`` stacked Mamba2
+layers (inner scan) followed by one shared-block invocation. Each invocation
+owns a KV cache slot (stacked over G) for decode.
+
+Quantization policy granularity is the GROUP for the Mamba2 stack; the shared
+block (one weight set reused G times) is quantized at ``default_bits``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..core.policy import QuantPolicy
+from .attention import attention_block, init_attention
+from .layers import QuantSpec, init_norm, rmsnorm
+from .mamba2 import init_mamba2_block, mamba2_block, mamba2_state_init
+from .transformer import (ffn_apply, init_ffn, _slice_stack,
+                          mask_padded_vocab, scan_layers)
+
+
+def _groups(cfg: ModelConfig) -> tuple[int, int]:
+    per = cfg.attn_every
+    assert cfg.num_layers % per == 0, (cfg.num_layers, per)
+    return cfg.num_layers // per, per
+
+
+def group_segments(policy: QuantPolicy, num_groups: int, use_pallas=False
+                   ) -> list[tuple[int, int, QuantSpec]]:
+    """Policy at group granularity: group g gets the bits of its first layer."""
+    per = policy.num_layers // num_groups
+    segs: list[tuple[int, int, QuantSpec]] = []
+    for g in range(num_groups):
+        wb = policy.weight_bits(g * per) or 0
+        ab = policy.act_bits(g * per) or 0
+        spec = QuantSpec(mode=policy.mode, w_bits=wb, a_bits=ab,
+                         grad_mode=policy.grad_mode, use_pallas=use_pallas)
+        if segs and segs[-1][2] == spec:
+            segs[-1] = (segs[-1][0], g + 1, spec)
+        else:
+            segs.append((g, g + 1, spec))
+    return segs
+
+
+def init_hybrid(cfg: ModelConfig, key) -> dict:
+    G, per = _groups(cfg)
+    ks = jax.random.split(key, 8)
+    # stacked (G, per, ...) mamba params: init as (G*per) then reshape leaves
+    flat = init_mamba2_block(ks[0], cfg, stacked=G * per)
+    mamba = jax.tree.map(lambda a: a.reshape(G, per, *a.shape[1:]), flat)
+    return {
+        "embed": jax.random.normal(ks[1], (cfg.padded_vocab, cfg.d_model)) * 0.02,
+        "mamba": mamba,
+        "shared": {
+            "ln1": init_norm(ks[2], cfg.d_model, "rms"),
+            "attn": init_attention(ks[3], cfg.d_model, cfg.num_heads,
+                                   cfg.num_kv_heads, cfg.hd, cfg.qkv_bias,
+                                   cfg.out_bias),
+            "ln2": init_norm(ks[4], cfg.d_model, "rms"),
+            "ffn": init_ffn(ks[5], cfg, None),
+        },
+        "final_norm": init_norm(ks[6], cfg.d_model, "rms"),
+        "lm_head": jax.random.normal(ks[7], (cfg.d_model, cfg.padded_vocab)) * 0.02,
+    }
+
+
+def _shared_block(x, p, cfg: ModelConfig, spec: QuantSpec, cache=None):
+    h = rmsnorm(x, p["ln1"]["scale"])
+    chunk = cfg.attn_chunk if x.shape[1] > cfg.attn_chunk_threshold else 0
+    a, new_cache, _ = attention_block(
+        h, p["attn"], n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads, hd=cfg.hd,
+        spec=spec, causal=True, rope=True, rope_theta=cfg.rope_theta,
+        cache=cache, chunk=chunk)
+    x = x + a
+    x = x + ffn_apply(rmsnorm(x, p["ln2"]["scale"]), p["ffn"], cfg, spec)
+    return x, new_cache
+
+
+def hybrid_forward(params, cfg: ModelConfig, segments, *, tokens=None,
+                   states: Optional[dict] = None, want_taps: bool = False,
+                   **_unused):
+    """states: {'mamba': stacked (G,per,...) ssm/conv, 'attn': stacked (G,...) kv}."""
+    G, per = _groups(cfg)
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    presliced = isinstance(params["mamba"], (list, tuple))
+    shared_spec = segments[-1][2]  # shared block: default-bits spec of last seg
+    taps = None
+
+    def make_group_body(spec, with_state):
+        def inner(carry, xs):
+            h = carry
+            if with_state:
+                lp, st = xs
+                h2, ns = mamba2_block(h, lp, cfg, spec, state=st)
+                return h2, ns
+            h2, _ = mamba2_block(h, xs, cfg, spec)
+            return h2, jnp.zeros((), jnp.float32)
+
+        def body(carry, xs):
+            if with_state:
+                # states ride the carry; per-group slices updated in place
+                h, st = carry
+                lp, idx = xs
+                mst = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(a, idx, 0, False),
+                    st["mamba"])
+                ac = st["attn"]
+                acache = {
+                    "k": jax.lax.dynamic_index_in_dim(ac["k"], idx, 0, False),
+                    "v": jax.lax.dynamic_index_in_dim(ac["v"], idx, 0, False),
+                    "len": ac["len"],
+                }
+                h, new_mst = jax.lax.scan(inner, h, (lp, mst))
+                h, (k_new, v_new) = _shared_block(h, params["shared"], cfg,
+                                                  shared_spec, cache=acache)
+                upd = lambda a, u: jax.lax.dynamic_update_index_in_dim(
+                    a, u.astype(a.dtype), idx, 0)
+                from .transformer import _to_cache
+                start = (idx, 0, ac["len"], 0, 0)
+                new_attn = {
+                    "k": jax.lax.dynamic_update_slice(
+                        ac["k"], _to_cache(k_new, ac["k"].dtype)[None], start),
+                    "v": jax.lax.dynamic_update_slice(
+                        ac["v"], _to_cache(v_new, ac["v"].dtype)[None], start),
+                    "len": ac["len"],
+                }
+                st = {"mamba": jax.tree.map(upd, st["mamba"], new_mst),
+                      "attn": new_attn}
+                return (h, st), None
+            h = carry
+            lp = xs
+            h, _ = scan_layers(inner, h, lp)
+            h, _ = _shared_block(h, params["shared"], cfg, shared_spec)
+            return h, jnp.zeros((), jnp.float32)
+        return body
+
+    out_states = states
+    for si, (start, end, spec) in enumerate(segments):
+        seg_m = (params["mamba"][si] if presliced
+                 else _slice_stack(params["mamba"], start, end))
+        body = make_group_body(spec, states is not None)
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        if states is not None:
+            idxs = jnp.arange(start, end)
+            (x, out_states), _ = jax.lax.scan(body, (x, out_states),
+                                              (seg_m, idxs))
+        else:
+            x, _ = scan_layers(body, x, seg_m)
+
+    if want_taps:  # last shared-attn invocation taps (attention part only)
+        h = rmsnorm(x, params["shared"]["ln1"]["scale"])
+        _, _, taps = attention_block(
+            h, params["shared"]["attn"], n_heads=cfg.num_heads,
+            n_kv=cfg.num_kv_heads, hd=cfg.hd, spec=shared_spec, causal=True,
+            rope=True, rope_theta=cfg.rope_theta, want_taps=True)
+        taps["hidden"] = x
+
+    if out_states is not None:
+        out_states = {**out_states,
+                      "attn": {**out_states["attn"],
+                               "len": out_states["attn"]["len"] + x.shape[1]}}
+    x = rmsnorm(x, params["final_norm"]["scale"])
+    logits = mask_padded_vocab(x @ params["lm_head"].astype(x.dtype), cfg)
+    return logits, out_states, taps, jnp.zeros((), jnp.float32)
+
+
+def hybrid_states(cfg: ModelConfig, batch: int, max_len: int,
+                  dtype=jnp.bfloat16, as_specs: bool = False) -> dict:
+    G, per = _groups(cfg)
+    mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if as_specs else (
+        lambda s, d: jnp.zeros(s, d))
+    m1 = mamba2_state_init(cfg, batch, as_specs=as_specs)
+    mamba = jax.tree.map(
+        lambda a: (jax.ShapeDtypeStruct((G, per) + a.shape, a.dtype)
+                   if as_specs else jnp.zeros((G, per) + a.shape, a.dtype)),
+        m1)
+    attn = {"k": mk((G, batch, max_len, cfg.num_kv_heads, cfg.hd), dtype),
+            "v": mk((G, batch, max_len, cfg.num_kv_heads, cfg.hd), dtype),
+            "len": mk((), jnp.int32)}
+    return {"mamba": mamba, "attn": attn}

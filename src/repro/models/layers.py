@@ -1,0 +1,169 @@
+"""Shared layer primitives: the quantizable linear, norms, activations, RoPE.
+
+Structural quantization rule (paper §5): ONLY matmul inputs/weights are
+quantized. LayerNorm/RMSNorm, softmax and GELU/SiLU run in fp32. The embedding
+table is never quantized.
+
+``qlinear`` is the single quantized-matmul primitive used by every arch:
+
+  mode 'none'  : x @ w            (fp baseline / teacher)
+  mode 'fake'  : Q_a[x] @ Q_w[w]  (QAT; LSQ with 'mse' or 'ste' scale grads)
+  mode 'int'   : int8 codes matmul'd on the integer unit with fused dequant;
+                 weights arrive pre-quantized (packed int4 or int8) via
+                 core.packing. Optionally dispatches to the Pallas TPU kernels.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.quantizer import fake_quant, quantize_to_int, qrange
+from ..core.packing import unpack_int4
+
+__all__ = ["QuantSpec", "qlinear", "rmsnorm", "layernorm", "gelu_f32",
+           "rope_tables", "apply_rope", "init_linear", "init_norm", "act_fn"]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Static per-call quantization spec (bits vary per layer-SEGMENT, not per step)."""
+    mode: str = "none"          # none | fake | int
+    w_bits: int = 0             # 0 = unquantized
+    a_bits: int = 0
+    grad_mode: str = "mse"
+    use_pallas: bool = False    # int mode: pallas kernels (TPU) vs jnp int path
+
+    @property
+    def enabled(self) -> bool:
+        return self.mode != "none" and self.w_bits > 0
+
+    def with_mode(self, mode: str) -> "QuantSpec":
+        return dataclasses.replace(self, mode=mode)
+
+
+NONE_SPEC = QuantSpec()
+
+
+def _int_matmul_jnp(x8: jax.Array, w8: jax.Array) -> jax.Array:
+    """int8 x int8 -> int32 dot (native on the TPU MXU)."""
+    return jax.lax.dot_general(
+        x8, w8, (((x8.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+
+def qlinear(x: jax.Array, p: dict, spec: QuantSpec) -> jax.Array:
+    """Quantizable linear. p holds either fp or deployed-int parameters.
+
+    fp params:  {'w': (K, N), 'b': (N,)?, 's_w': (1, N), 's_a': ()}
+    int params: {'wq': packed, 's_w': (1, N), 's_a': (), 'b': (N,)?, 'w_bits': static}
+    """
+    from ..core import calibration
+    if calibration.active():
+        calibration.record_input(x)
+    b = p.get("b")
+    if spec.mode == "int":
+        return _qlinear_int(x, p, spec)
+    w = p["w"]
+    if spec.mode == "fake" and spec.enabled:
+        w = fake_quant(w, p["s_w"], spec.w_bits, spec.grad_mode)
+        if spec.a_bits:
+            x = fake_quant(x, p["s_a"], spec.a_bits, spec.grad_mode)
+    out = x @ w.astype(x.dtype)
+    if b is not None:
+        out = out + b.astype(out.dtype)
+    return out
+
+
+def _qlinear_int(x: jax.Array, p: dict, spec: QuantSpec) -> jax.Array:
+    """Deployed integer path. Activations quantized on the fly (per-tensor scale)."""
+    s_a, s_w = p["s_a"], p["s_w"]
+    a_bits = spec.a_bits or 8
+    if spec.use_pallas:
+        from ..kernels import ops as kops  # lazy: keeps CPU-only paths pallas-free
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        if spec.w_bits == 4:
+            out = kops.int4_matmul(x2, p["wq"], s_a, s_w, a_bits=a_bits)
+        else:
+            out = kops.int8_matmul(x2, p["wq"], s_a, s_w, a_bits=a_bits)
+        out = out.reshape(*lead, -1)
+    else:
+        x8 = quantize_to_int(x, s_a, a_bits)
+        w8 = unpack_int4(p["wq"], axis=-2) if spec.w_bits == 4 else p["wq"]
+        k = x.shape[-1]
+        if w8.shape[-2] != k:  # drop int4 pack padding row if any
+            w8 = jax.lax.slice_in_dim(w8, 0, k, axis=-2)
+        acc = _int_matmul_jnp(x8, w8)
+        out = (acc.astype(jnp.float32) * (s_a * s_w)).astype(x.dtype)
+    b = p.get("b")
+    if b is not None:
+        out = out + b.astype(out.dtype)
+    return out
+
+
+# ---------------------------------------------------------------- norms/acts
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def gelu_f32(x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x.astype(jnp.float32), approximate=True).astype(x.dtype)
+
+
+def act_fn(name: str):
+    return {"gelu": gelu_f32,
+            "silu": lambda x: (jax.nn.silu(x.astype(jnp.float32))).astype(x.dtype),
+            "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------- RoPE
+def rope_tables(positions: jax.Array, dim: int, theta: float = 10000.0):
+    """cos/sin tables for positions: (..., S) -> (..., S, dim/2) each, f32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, dh); cos/sin: (B_or_1, S, dh/2) broadcast over heads."""
+    xf = x.astype(jnp.float32)
+    x1, x2 = jnp.split(xf, 2, axis=-1)
+    c, s = cos[:, :, None, :], sin[:, :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], -1).astype(x.dtype)
+
+
+# ----------------------------------------------------------------- inits
+def init_linear(key, k: int, n: int, bias: bool, stacked: int | None = None,
+                dtype=jnp.float32) -> dict:
+    """fp linear params (+ unit quant scales, calibrated later)."""
+    shape = (k, n) if stacked is None else (stacked, k, n)
+    std = 0.02
+    p = {"w": jax.random.normal(key, shape, dtype) * std,
+         "s_w": jnp.ones(shape[:-2] + (1, n), jnp.float32),
+         "s_a": jnp.ones(shape[:-2], jnp.float32)}
+    if bias:
+        p["b"] = jnp.zeros(shape[:-2] + (n,), dtype)
+    return p
+
+
+def init_norm(k_unused, d: int, kind: str, stacked: int | None = None,
+              dtype=jnp.float32) -> dict:
+    shape = (d,) if stacked is None else (stacked, d)
+    p = {"scale": jnp.ones(shape, dtype)}
+    if kind == "ln":
+        p["bias"] = jnp.zeros(shape, dtype)
+    return p

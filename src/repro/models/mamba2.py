@@ -1,0 +1,181 @@
+"""Mamba2 (SSD) blocks and the Zamba2 hybrid stack.
+
+Training/prefill uses the chunked SSD algorithm (Mamba2 paper, minimal form):
+intra-chunk quadratic term + inter-chunk state recurrence via ``lax.scan`` over
+chunks. Decode is the O(1) per-token recurrence on state (B, H, P, N).
+
+Zamba2 (arXiv:2411.15242): a Mamba2 backbone where ONE shared
+attention+FFN block (single weight set) is invoked every ``attn_every``-th
+layer. We structure the stack as scan-over-groups; each group = (attn_every-1)
+Mamba2 layers (stacked params) + one invocation of the shared block. Each
+invocation keeps its own KV cache.
+
+Quantization (MKQ): in/out projections and shared-block matmuls route through
+``qlinear``; SSM internals (gates, scan, conv) stay fp32 — the same structural
+rule as LayerNorm/softmax in the paper. Attention distill applies only to the
+shared block; Mamba2 layers use hidden-state distill (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import QuantSpec, init_linear, init_norm, qlinear, rmsnorm
+
+CONV_K = 4
+
+
+# ------------------------------------------------------------------ SSD core
+
+def _segsum(x):
+    """log-space segment sums: out[..., i, j] = sum_{j<k<=i} x[..., k]."""
+    T = x.shape[-1]
+    c = jnp.cumsum(x, axis=-1)
+    d = c[..., :, None] - c[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a_log, b, c, chunk: int):
+    """Chunked SSD. x:(B,S,H,P) dt:(B,S,H) a_log:(H,) b,c:(B,S,N) -> y, final_state.
+
+    Single B/C group shared across heads (n_groups=1).
+    """
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    Q = chunk
+    nc = S // Q
+    assert S % Q == 0, (S, Q)
+    xd = x * dt[..., None]                                  # dt-weighted input
+    dA = dt * (-jnp.exp(a_log))[None, None, :]              # (B,S,H) <= 0
+    # chunked views
+    xc = xd.reshape(B, nc, Q, H, P)
+    bc = b.reshape(B, nc, Q, N)
+    cc = c.reshape(B, nc, Q, N)
+    dAc = dA.reshape(B, nc, Q, H)
+    cum = jnp.cumsum(dAc, axis=2)                           # (B,nc,Q,H)
+
+    # 1) intra-chunk (diagonal) term
+    L = jnp.exp(_segsum(dAc.transpose(0, 1, 3, 2)))         # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", cc, bc)          # (B,nc,Q,Q)
+    y_diag = jnp.einsum("bcqk,bchqk,bckhp->bcqhp", scores, L.astype(scores.dtype), xc)
+    # 2) per-chunk input states
+    decay_states = jnp.exp(cum[:, :, -1:, :] - cum)         # (B,nc,Q,H)
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn", bc, decay_states, xc)
+    # 3) inter-chunk recurrence
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                 # (B,nc,H)
+
+    def step(s_prev, inp):
+        st, dec = inp
+        s_new = s_prev * dec[..., None, None] + st
+        return s_new, s_prev
+
+    init = jnp.zeros((B, H, P, N), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        step, init,
+        (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)      # (B,nc,H,P,N)
+    # 4) state -> output within chunk
+    state_decay = jnp.exp(cum)                              # (B,nc,Q,H)
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp",
+                       cc, prev_states.astype(cc.dtype), state_decay)
+    y = (y_diag + y_off).reshape(B, S, H, P)
+    return y, final_state
+
+
+def ssd_decode_step(state, x, dt, a_log, b, c):
+    """One-token recurrence. state:(B,H,P,N) x:(B,1,H,P) dt:(B,1,H) b,c:(B,1,N)."""
+    dA = jnp.exp(dt[:, 0] * (-jnp.exp(a_log))[None, :])     # (B,H)
+    xd = (x * dt[..., None])[:, 0]                          # (B,H,P)
+    new_state = state * dA[..., None, None] + jnp.einsum(
+        "bhp,bn->bhpn", xd.astype(jnp.float32), b[:, 0].astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", new_state.astype(c.dtype), c[:, 0])
+    return y[:, None], new_state
+
+
+# ------------------------------------------------------------------ block
+
+def init_mamba2_block(key, cfg: ModelConfig, stacked=None) -> dict:
+    """z/x projections are separate weights (TP: column-sharded over 'model');
+    the small B/C/dt projections stay replicated (DESIGN.md §4)."""
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    H = di // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    shp = lambda *s: (stacked, *s) if stacked is not None else s
+    return {
+        "norm": init_norm(ks[0], d, "rms", stacked),
+        "in_z": init_linear(ks[1], d, di, False, stacked),
+        "in_x": init_linear(ks[2], d, di, False, stacked),
+        "in_bc": init_linear(ks[4], d, 2 * N, False, stacked),
+        "in_dt": init_linear(ks[5], d, H, False, stacked),
+        "conv_w": jax.random.normal(ks[3], shp(CONV_K, di + 2 * N)) * 0.1,
+        "a_log": jnp.zeros(shp(H), jnp.float32),
+        "dt_bias": jnp.zeros(shp(H), jnp.float32),
+        "d_skip": jnp.ones(shp(H), jnp.float32),
+        "ssm_norm": init_norm(ks[0], di, "rms", stacked),
+        "out_proj": init_linear(ks[3], di, d, False, stacked),
+    }
+
+
+def _causal_conv(u, w, cache=None):
+    """Depthwise causal conv. u:(B,S,C) w:(K,C); cache:(B,K-1,C) for decode."""
+    if cache is not None:
+        u_ext = jnp.concatenate([cache.astype(u.dtype), u], axis=1)
+        new_cache = u_ext[:, -(CONV_K - 1):]
+    else:
+        u_ext = jnp.pad(u, ((0, 0), (CONV_K - 1, 0), (0, 0)))
+        new_cache = None
+    S = u.shape[1]
+    out = sum(u_ext[:, i:i + S] * w[i] for i in range(CONV_K))
+    return out, new_cache
+
+
+def mamba2_block(x, p, cfg: ModelConfig, spec: QuantSpec,
+                 state: Optional[dict] = None):
+    """Pre-norm residual Mamba2 block. state: {'ssm': (B,H,P,N), 'conv': (B,K-1,C)}."""
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    H = di // cfg.ssm_head_dim
+    P = cfg.ssm_head_dim
+    N = cfg.ssm_state
+    B_, S, _ = x.shape
+
+    h = rmsnorm(x, p["norm"]["scale"])
+    z = qlinear(h, p["in_z"], spec)
+    xs = qlinear(h, p["in_x"], spec)
+    bc = qlinear(h, p["in_bc"], spec)
+    dt = qlinear(h, p["in_dt"], spec)
+    conv_in = jnp.concatenate([xs, bc], axis=-1)
+    conv_out, new_conv = _causal_conv(
+        conv_in, p["conv_w"], None if state is None else state["conv"])
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    xs, b, c = jnp.split(conv_out, [di, di + N], axis=-1)
+    xs = xs.reshape(B_, S, H, P)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])    # (B,S,H)
+
+    if state is None:
+        y, _ = ssd_chunked(xs, dt, p["a_log"], b, c, cfg.ssm_chunk)
+        new_state = None
+    else:
+        y, new_ssm = ssd_decode_step(state["ssm"], xs, dt, p["a_log"], b, c)
+        new_state = {"ssm": new_ssm, "conv": new_conv}
+    y = y.astype(x.dtype) + xs * p["d_skip"][None, None, :, None].astype(xs.dtype)
+    y = y.reshape(B_, S, di)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                p["ssm_norm"]["scale"])
+    return x + qlinear(y, p["out_proj"], spec), new_state
+
+
+def mamba2_state_init(cfg: ModelConfig, batch: int, as_specs=False):
+    di = cfg.ssm_expand * cfg.d_model
+    H = di // cfg.ssm_head_dim
+    mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if as_specs else (
+        lambda s, d: jnp.zeros(s, d))
+    return {"ssm": mk((batch, H, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+            "conv": mk((batch, CONV_K - 1, di + 2 * cfg.ssm_state), jnp.float32)}

@@ -1,0 +1,494 @@
+"""Decoder-only transformer LM (dense / MoE / VLM) and BERT-style encoder.
+
+Layer stacks are ``lax.scan`` over stacked parameters (leading dim = layers)
+for compile-time economy at 32-80 layers. The MKQ mixed-precision policy
+(int4 from the last layer backwards, int8 elsewhere) yields CONTIGUOUS
+bit-segments, so the stack is executed as one scan per segment with a static
+``QuantSpec`` — no per-step branching on bit width.
+
+MoE uses grouped dense one-hot dispatch (GShard/MaxText style): deterministic
+shapes, GSPMD-friendly; the group axis shards with the batch. The dispatch
+einsum FLOP overhead is analyzed (and attacked) in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..core.policy import QuantPolicy
+from .attention import attention_block, cache_specs, init_attention
+from .layers import (QuantSpec, act_fn, init_linear, init_norm, layernorm,
+                     qlinear, rmsnorm)
+
+# ------------------------------------------------------------------ policy → segments
+
+def segments_from_policy(policy: QuantPolicy, use_pallas: bool = False
+                         ) -> list[tuple[int, int, QuantSpec]]:
+    """Contiguous (start, end, QuantSpec) runs of equal bit-width."""
+    segs: list[tuple[int, int, QuantSpec]] = []
+    for l in range(policy.num_layers):
+        wb, ab = policy.weight_bits(l) or 0, policy.act_bits(l) or 0
+        spec = QuantSpec(mode=policy.mode, w_bits=wb, a_bits=ab,
+                         grad_mode=policy.grad_mode, use_pallas=use_pallas)
+        if segs and segs[-1][2] == spec:
+            segs[-1] = (segs[-1][0], l + 1, spec)
+        else:
+            segs.append((l, l + 1, spec))
+    return segs
+
+
+def default_segments(num_layers: int) -> list[tuple[int, int, QuantSpec]]:
+    return [(0, num_layers, QuantSpec())]
+
+
+def _slice_stack(tree, start: int, end: int):
+    return jax.tree.map(lambda a: a[start:end], tree)
+
+
+def _to_cache(x, dtype):
+    """Cast new-token k/v into the cache dtype; int8 caches quantize with the
+    static KV scale (models/attention.py)."""
+    import jax.numpy as _jnp
+    if dtype == _jnp.int8:
+        from .attention import KV_QUANT_SCALE
+        return _jnp.clip(_jnp.round(x.astype(_jnp.float32) / KV_QUANT_SCALE),
+                         -127, 127).astype(_jnp.int8)
+    return x.astype(dtype)
+
+
+def scan_layers(body, carry, xs):
+    """lax.scan, or an eager python loop during calibration (so activation
+    stats can be collected per layer — core/calibration.py)."""
+    from ..core import calibration
+    if not calibration.active():
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        stacked = jax.tree.map(lambda *z: jnp.stack(z), *ys)
+    else:
+        stacked = None
+    return carry, stacked
+
+
+# ------------------------------------------------------------------ norms
+
+def _norm(x, p, kind):
+    return rmsnorm(x, p["scale"]) if kind == "rms" else layernorm(
+        x, p["scale"], p["bias"])
+
+
+# ------------------------------------------------------------------ FFN
+
+def init_ffn(key, cfg: ModelConfig, stacked: int | None) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "swiglu":
+        if cfg.fused_proj:  # fused gate-up: one matmul, one bwd-dx psum
+            return {"w13": init_linear(ks[0], d, 2 * f, False, stacked),
+                    "w2": init_linear(ks[2], f, d, False, stacked)}
+        return {"w1": init_linear(ks[0], d, f, False, stacked),
+                "w3": init_linear(ks[1], d, f, False, stacked),
+                "w2": init_linear(ks[2], f, d, False, stacked)}
+    return {"w1": init_linear(ks[0], d, f, True, stacked),
+            "w2": init_linear(ks[1], f, d, True, stacked)}
+
+
+def ffn_apply(x, p, cfg: ModelConfig, spec: QuantSpec):
+    if "w13" in p:
+        h13 = qlinear(x, p["w13"], spec)
+        h1, h3 = jnp.split(h13, 2, axis=-1)
+        h = jax.nn.silu(h1.astype(jnp.float32)).astype(x.dtype) * h3
+    elif cfg.act == "swiglu":
+        h = jax.nn.silu(qlinear(x, p["w1"], spec).astype(jnp.float32)).astype(x.dtype)
+        h = h * qlinear(x, p["w3"], spec)
+    else:
+        h = act_fn(cfg.act)(qlinear(x, p["w1"], spec))
+    return qlinear(h, p["w2"], spec)
+
+
+# ------------------------------------------------------------------ MoE
+
+def _init_expert_linear(key, e: int, k: int, n: int, stacked: int | None) -> dict:
+    shp = lambda *s: (stacked, *s) if stacked is not None else s
+    return {"w": jax.random.normal(key, shp(e, k, n)) * 0.02,
+            "s_w": jnp.ones(shp(e, 1, n), jnp.float32),
+            "s_a": jnp.ones(shp(e, 1, 1), jnp.float32)}
+
+
+def init_moe(key, cfg: ModelConfig, stacked: int | None) -> dict:
+    d, f, e = cfg.d_model, cfg.expert_d_ff, cfg.num_experts
+    ks = jax.random.split(key, 6)
+    shp = lambda *s: (stacked, *s) if stacked is not None else s
+    std = 0.02
+    p = {
+        "router": jax.random.normal(ks[0], shp(d, e), jnp.float32) * std,
+        "w1": _init_expert_linear(ks[1], e, d, f, stacked),
+        "w3": _init_expert_linear(ks[2], e, d, f, stacked),
+        "w2": _init_expert_linear(ks[3], e, f, d, stacked),
+    }
+    if cfg.shared_expert_d_ff:
+        sub = dataclasses.replace(cfg, d_ff=cfg.shared_expert_d_ff)
+        p["shared"] = init_ffn(ks[4], sub, stacked)
+        p["shared_gate"] = jax.random.normal(ks[5], shp(d, 1), jnp.float32) * std
+    return p
+
+
+def _expert_matmul(x_ecd, p: dict, spec: QuantSpec):
+    """x: (E, C, K) @ w: (E, K, N) with per-expert quantization."""
+    from ..core import calibration
+    from ..core.packing import unpack_int4
+    from ..core.quantizer import fake_quant, quantize_to_int
+    if calibration.active():
+        calibration.record_input(x_ecd, per_axis0=True)
+    if spec.mode == "int":
+        a_bits = spec.a_bits or 8
+        x8 = quantize_to_int(x_ecd, p["s_a"], a_bits)
+        w8 = unpack_int4(p["wq"], axis=-2) if spec.w_bits == 4 else p["wq"]
+        k = x_ecd.shape[-1]
+        if w8.shape[-2] != k:
+            w8 = jax.lax.slice_in_dim(w8, 0, k, axis=-2)
+        acc = jnp.einsum("eck,ekn->ecn", x8, w8,
+                         preferred_element_type=jnp.int32)
+        return (acc.astype(jnp.float32) * (p["s_a"] * p["s_w"])).astype(x_ecd.dtype)
+    w = p["w"]
+    if spec.mode == "fake" and spec.enabled:
+        w = fake_quant(w, p["s_w"], spec.w_bits, spec.grad_mode)
+        if spec.a_bits:
+            x_ecd = fake_quant(x_ecd, p["s_a"], spec.a_bits, spec.grad_mode)
+    return jnp.einsum("eck,ekn->ecn", x_ecd, w.astype(x_ecd.dtype))
+
+
+def moe_apply_sorted(x, p, cfg: ModelConfig, spec: QuantSpec):
+    """Sort-based dispatch (SS Perf / DESIGN SS6b): argsort tokens by expert,
+    gather into (E, C, d) slots, run experts, scatter-add back.
+
+    Replaces the dense one-hot dispatch/combine einsums — whose FLOPs scale
+    with tokens x capacity and dominate the MoE cells' compiled compute
+    (useful ratio 0.03-0.26 in the baseline roofline) — with gathers that
+    cost bytes, not MXU FLOPs. Equivalent to the dense path whenever no
+    expert overflows capacity (test_moe_sorted_matches_dense); under
+    overflow the two drop different tokens (priority order differs).
+    """
+    B, S, d = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    T = B * S
+    xf = x.reshape(T, d)
+    C = max(1, int(T * K * cfg.capacity_factor / E))
+
+    logits = xf.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)                       # (T,E)
+    top_vals, top_idx = jax.lax.top_k(gates, K)                   # (T,K)
+    top_vals = top_vals / jnp.maximum(top_vals.sum(-1, keepdims=True), 1e-9)
+
+    e_flat = top_idx.reshape(-1)                                  # (T*K,)
+    g_flat = top_vals.reshape(-1)
+    order = jnp.argsort(e_flat, stable=True)
+    e_sorted = e_flat[order]
+    tok_sorted = order // K
+    seg_start = jnp.searchsorted(e_sorted, jnp.arange(E))
+    pos_in_e = jnp.arange(T * K) - seg_start[e_sorted]
+    keep = pos_in_e < C
+    slot = jnp.where(keep, e_sorted * C + pos_in_e, E * C)        # drop -> pad
+
+    # gather tokens into expert slots (one extra pad row)
+    src = jnp.zeros((E * C + 1,), jnp.int32).at[slot].set(tok_sorted + 1)
+    valid = (src > 0)[:E * C]
+    xe = jnp.where(valid[:, None], xf[jnp.maximum(src[:E * C] - 1, 0)], 0.0)
+    xe = xe.reshape(E, C, d)
+
+    h1 = _expert_matmul(xe, p["w1"], spec)
+    h3 = _expert_matmul(xe, p["w3"], spec)
+    h = jax.nn.silu(h1.astype(jnp.float32)).astype(x.dtype) * h3
+    ye = _expert_matmul(h, p["w2"], spec).reshape(E * C, d)
+
+    # scatter-add weighted expert outputs back to tokens
+    y_rows = jnp.where(keep[:, None],
+                       ye[jnp.clip(slot, 0, E * C - 1)]
+                       * g_flat[order][:, None].astype(ye.dtype), 0.0)
+    out = jnp.zeros((T, d), ye.dtype).at[tok_sorted].add(y_rows)
+
+    if "shared" in p:
+        gate = jax.nn.sigmoid(xf.astype(jnp.float32)
+                              @ p["shared_gate"]).astype(x.dtype)
+        out = out + gate * ffn_apply(
+            xf, p["shared"],
+            dataclasses.replace(cfg, d_ff=cfg.shared_expert_d_ff), spec)
+
+    frac = jnp.mean(jax.nn.one_hot(top_idx[:, 0], E, dtype=jnp.float32), 0)
+    prob = jnp.mean(gates, axis=0)
+    aux = cfg.router_aux_coef * E * jnp.sum(frac * prob)
+    return out.reshape(B, S, d).astype(x.dtype), aux
+
+
+def moe_apply(x, p, cfg: ModelConfig, spec: QuantSpec):
+    """Grouped dense dispatch. x: (B, S, d) -> (out, aux_loss)."""
+    if cfg.moe_impl == "sorted":
+        return moe_apply_sorted(x, p, cfg, spec)
+    B, S, d = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    G = max(1, (B * S) // cfg.moe_group_size)
+    xg = x.reshape(G, -1, d)
+    Sg = xg.shape[1]
+    C = max(1, int(Sg * K * cfg.capacity_factor / E))
+
+    logits = (xg.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    gates = jax.nn.softmax(logits, axis=-1)                      # (G,Sg,E) fp32
+    top_vals, top_idx = jax.lax.top_k(gates, K)                  # (G,Sg,K)
+    top_vals = top_vals / jnp.maximum(top_vals.sum(-1, keepdims=True), 1e-9)
+
+    counts = jnp.zeros((G, 1, E), jnp.float32)
+    dispatch = jnp.zeros((G, Sg, E, C), x.dtype)
+    combine = jnp.zeros((G, Sg, E, C), jnp.float32)
+    for j in range(K):  # K is small (4/8); unrolled
+        m_j = jax.nn.one_hot(top_idx[..., j], E, dtype=jnp.float32)   # (G,Sg,E)
+        pos = jnp.cumsum(m_j, axis=1) - 1.0 + counts
+        keep = (pos < C) * m_j
+        counts = counts + m_j.sum(axis=1, keepdims=True)
+        oh = jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=jnp.float32)
+        d_j = keep[..., None] * oh                                    # (G,Sg,E,C)
+        dispatch = dispatch + d_j.astype(x.dtype)
+        combine = combine + d_j * top_vals[..., j, None, None]
+
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch, x.reshape(G, Sg, d))  # (G,E,C,d)
+    xe = xe.transpose(1, 0, 2, 3).reshape(E, G * C, d)
+    h1 = _expert_matmul(xe, p["w1"], spec)
+    h3 = _expert_matmul(xe, p["w3"], spec)
+    h = jax.nn.silu(h1.astype(jnp.float32)).astype(x.dtype) * h3
+    ye = _expert_matmul(h, p["w2"], spec)
+    ye = ye.reshape(E, G, C, d).transpose(1, 0, 2, 3)                 # (G,E,C,d)
+    out = jnp.einsum("gsec,gecd->gsd", combine.astype(x.dtype), ye)
+
+    if "shared" in p:
+        gate = jax.nn.sigmoid(x.astype(jnp.float32) @ p["shared_gate"]).astype(x.dtype)
+        out = out.reshape(B, S, d) + gate * ffn_apply(
+            x, p["shared"], dataclasses.replace(cfg, d_ff=cfg.shared_expert_d_ff), spec)
+        out = out.reshape(G, Sg, d)
+
+    # Switch-style load-balance aux loss.
+    frac = jnp.mean(jax.nn.one_hot(top_idx[..., 0], E, dtype=jnp.float32), axis=(0, 1))
+    prob = jnp.mean(gates, axis=(0, 1))
+    aux = cfg.router_aux_coef * E * jnp.sum(frac * prob)
+    return out.reshape(B, S, d), aux
+
+
+# ------------------------------------------------------------------ block / stack
+
+def init_block(key, cfg: ModelConfig, stacked: int | None) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {"ln1": init_norm(ks[0], cfg.d_model, cfg.norm, stacked),
+         "attn": init_attention(ks[1], cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                                cfg.hd, cfg.qkv_bias, cfg.out_bias, stacked,
+                                fused=cfg.fused_proj),
+         "ln2": init_norm(ks[2], cfg.d_model, cfg.norm, stacked)}
+    if cfg.family == "moe":
+        p["moe"] = init_moe(ks[3], cfg, stacked)
+    else:
+        p["ffn"] = init_ffn(ks[3], cfg, stacked)
+    return p
+
+
+def block_apply(x, p, cfg: ModelConfig, spec: QuantSpec, *,
+                cache: Optional[dict] = None, want_taps: bool = False,
+                positions=None):
+    pre = cfg.norm == "rms" or not cfg.learned_pos  # BERT uses post-LN
+    chunk = cfg.attn_chunk if x.shape[1] > cfg.attn_chunk_threshold else 0
+    aux = jnp.zeros((), jnp.float32)
+
+    ssa = (tuple(cfg.dp_axes), "model") if cfg.attn_seq_shard else None
+
+    def attn_fn(h):
+        return attention_block(
+            h, p["attn"], n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads, hd=cfg.hd,
+            spec=spec, causal=cfg.causal, rope=cfg.rope, rope_theta=cfg.rope_theta,
+            positions=positions, cache=cache, chunk=chunk,
+            seq_shard_axes=ssa, want_taps=want_taps)
+
+    if pre:
+        a, new_cache, taps = attn_fn(_norm(x, p["ln1"], cfg.norm))
+        x = x + a
+        h = _norm(x, p["ln2"], cfg.norm)
+        if cfg.family == "moe":
+            f, aux = moe_apply(h, p["moe"], cfg, spec)
+        else:
+            f = ffn_apply(h, p["ffn"], cfg, spec)
+        x = x + f
+    else:  # post-LN (BERT)
+        a, new_cache, taps = attn_fn(x)
+        x = _norm(x + a, p["ln1"], cfg.norm)
+        if cfg.family == "moe":
+            f, aux = moe_apply(x, p["moe"], cfg, spec)
+        else:
+            f = ffn_apply(x, p["ffn"], cfg, spec)
+        x = _norm(x + f, p["ln2"], cfg.norm)
+    return x, new_cache, taps, aux
+
+
+# ------------------------------------------------------------------ full model
+
+def init_lm(cfg: ModelConfig, key) -> dict:
+    ks = jax.random.split(key, 4)
+    L = cfg.num_layers
+    V = cfg.padded_vocab
+    params = {
+        "embed": jax.random.normal(ks[0], (V, cfg.d_model)) * 0.02,
+        "layers": init_block(ks[1], cfg, stacked=L),
+        "final_norm": init_norm(ks[2], cfg.d_model, cfg.norm),
+    }
+    if cfg.learned_pos:
+        params["pos_embed"] = jax.random.normal(
+            jax.random.fold_in(ks[0], 1), (8192, cfg.d_model)) * 0.02
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(
+            ks[3], (cfg.d_model, V)) * 0.02
+    return params
+
+
+def _embed(params, cfg: ModelConfig, tokens=None, src_embeds=None,
+           patch_embeds=None, patch_mask=None, offset=0):
+    if src_embeds is not None:
+        x = src_embeds
+    else:
+        x = params["embed"][tokens].astype(cfg.compute_dtype)
+        if patch_embeds is not None:
+            B, S, d = x.shape
+            npatch = patch_embeds.shape[1]
+            # place patch embeddings at masked positions (anyres stub: first
+            # `num_patches` masked slots correspond to patch rows in order)
+            idx = jnp.cumsum(patch_mask.astype(jnp.int32), axis=1) - 1
+            idx = jnp.clip(idx, 0, npatch - 1)
+            gathered = jnp.take_along_axis(
+                patch_embeds, idx[..., None].repeat(d, -1), axis=1)
+            x = jnp.where(patch_mask[..., None], gathered.astype(x.dtype), x)
+    if cfg.learned_pos:
+        S = x.shape[1]
+        x = x + params["pos_embed"][offset:offset + S][None].astype(x.dtype)
+    return x
+
+
+def lm_forward(params, cfg: ModelConfig, segments, *, tokens=None,
+               src_embeds=None, patch_embeds=None, patch_mask=None,
+               caches=None, want_taps: bool = False):
+    """Returns (logits, new_caches, taps, aux_loss).
+
+    caches: stacked per-layer KV caches {'k': (L,B,Smax,Hkv,hd), ...} or None.
+    """
+    x = _embed(params, cfg, tokens, src_embeds, patch_embeds, patch_mask,
+               offset=0)
+    layers = params["layers"]
+    # Deployed int mode: layers arrive as a per-segment list (packed weights
+    # can't live in one stacked array across bit-width segments).
+    presliced = isinstance(layers, (list, tuple))
+    aux_total = jnp.zeros((), jnp.float32)
+    taps = None
+
+    def write_new_kv(cs, idx, new_kv):
+        """insert (B, Sq, Hkv, dh) new-token k/v at [layer=idx, :, len] —
+        a one-token write instead of a full-cache copy per layer."""
+        k_new, v_new = new_kv
+        start = (idx, 0, cs["len"], 0, 0)
+        return {
+            "k": jax.lax.dynamic_update_slice(
+                cs["k"], _to_cache(k_new, cs["k"].dtype)[None], start),
+            "v": jax.lax.dynamic_update_slice(
+                cs["v"], _to_cache(v_new, cs["v"].dtype)[None], start),
+            "len": cs["len"],
+        }
+
+    def make_body(spec, with_cache):
+        def body(carry, xs):
+            if with_cache:
+                # caches ride the carry: read the layer's slice, write only
+                # the new token (XLA aliases the donated cache buffer).
+                h, cs = carry
+                lp, idx = xs
+                cache_l = {
+                    "k": jax.lax.dynamic_index_in_dim(cs["k"], idx, 0, False),
+                    "v": jax.lax.dynamic_index_in_dim(cs["v"], idx, 0, False),
+                    "len": cs["len"],
+                }
+                h2, nc, _, aux = block_apply(h, lp, cfg, spec, cache=cache_l)
+                return (h2, write_new_kv(cs, idx, nc)), aux
+            h = carry
+            lp = xs
+            h2, _, _, aux = block_apply(h, lp, cfg, spec)
+            return h2, aux
+        return body
+
+    for si, (start, end, spec) in enumerate(segments):
+        is_last_seg = si == len(segments) - 1
+        n_scan = end - start - (1 if (want_taps and is_last_seg) else 0)
+        seg_full = layers[si] if presliced else _slice_stack(layers, start, end)
+        seg_layers = _slice_stack(seg_full, 0, n_scan)
+        body = make_body(spec, caches is not None)
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        if n_scan > 0:
+            if caches is not None:
+                idxs = jnp.arange(start, start + n_scan)
+                (x, caches), auxs = jax.lax.scan(
+                    body, (x, caches), (seg_layers, idxs))
+            else:
+                x, auxs = scan_layers(body, x, seg_layers)
+            aux_total = aux_total + jnp.sum(auxs)
+        if want_taps and is_last_seg:
+            lp = jax.tree.map(lambda a: a[-1], seg_full)
+            cache_l = None
+            if caches is not None:
+                cache_l = {"k": caches["k"][end - 1], "v": caches["v"][end - 1],
+                           "len": caches["len"]}
+            x, nc, taps, aux = block_apply(x, lp, cfg, spec, cache=cache_l,
+                                           want_taps=True)
+            aux_total = aux_total + aux
+            if caches is not None:
+                caches = write_new_kv(caches, end - 1, nc)
+
+    new_caches = None
+    if caches is not None:
+        new_caches = {**caches, "len": caches["len"] + x.shape[1]}
+
+    x = _norm(x, params["final_norm"], cfg.norm)
+    head = params.get("lm_head")
+    if head is None:
+        logits = x @ params["embed"].T.astype(x.dtype)
+    else:
+        logits = x @ head.astype(x.dtype)
+    logits = mask_padded_vocab(logits, cfg)
+    return logits, new_caches, taps, aux_total
+
+
+def lm_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+              as_specs: bool = False):
+    L = cfg.num_layers
+    mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if as_specs else (
+        lambda s, d: jnp.zeros(s, d))
+    return {"k": mk((L, batch, max_len, cfg.num_kv_heads, cfg.hd), dtype),
+            "v": mk((L, batch, max_len, cfg.num_kv_heads, cfg.hd), dtype),
+            "len": mk((), jnp.int32)}
+
+
+def mask_padded_vocab(logits, cfg: ModelConfig):
+    """-inf the vocab-padding logits (embedding rows padded for TP)."""
+    V = cfg.padded_vocab
+    if V == cfg.vocab_size:
+        return logits
+    ids = jax.lax.broadcasted_iota(jnp.int32, (V,), 0)
+    return jnp.where(ids < cfg.vocab_size, logits,
+                     jnp.asarray(-1e9, logits.dtype))
+
+
+def lm_loss(logits, labels, ignore_id: int = -1):
+    """Next-token CE in fp32; labels already shifted by the data pipeline."""
+    lf = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None].clip(0), -1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = (logz - gold) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)

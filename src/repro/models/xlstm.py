@@ -1,0 +1,363 @@
+"""xLSTM (arXiv:2405.04517): mLSTM (matrix memory) + sLSTM (scalar memory) blocks.
+
+mLSTM uses the CHUNKWISE-PARALLEL stabilized form (TFLA/mlstm-kernels style):
+scan over sequence chunks carrying (C_hat, n_hat, m) with log-space running
+max stabilization — intra-chunk quadratic term + inter-chunk state term.
+Decode is the O(1) stabilized recurrence. sLSTM is a true time recurrence
+(block-diagonal per-head hidden-to-hidden matrices) via ``lax.scan``.
+
+Stack layout (xlstm-1.3b): groups of ``slstm_every`` layers =
+(slstm_every - 1) mLSTM + 1 sLSTM, scanned over groups.
+
+Quantized matmuls (MKQ): up/down projections, q/k/v projections, sLSTM input
+matmul. Gates, norms, recurrences stay fp32. Attention-distribution distill is
+inapplicable (no softmax attention) — hidden-state distill instead (DESIGN §5).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import QuantSpec, init_linear, init_norm, qlinear, rmsnorm
+from .transformer import _slice_stack, mask_padded_vocab, scan_layers
+
+CONV_K = 4
+
+
+def _groups(cfg: ModelConfig) -> tuple[int, int]:
+    per = cfg.slstm_every
+    assert cfg.num_layers % per == 0
+    return cfg.num_layers // per, per
+
+
+# ------------------------------------------------------------------ mLSTM core
+
+def _headnorm(x, scale):
+    """Per-head RMS norm over dh: x (B,S,H,dh), scale (H*dh,)."""
+    B, S, H, dh = x.shape
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + 1e-6)
+    return (y.reshape(B, S, H * dh) * scale).astype(x.dtype)
+
+
+def mlstm_chunked(q, k, v, i_pre, f_pre, chunk: int, state=None):
+    """Stabilized chunkwise mLSTM.
+
+    q,k,v: (B,S,H,dh); i_pre,f_pre: (B,S,H) raw gate pre-activations.
+    state: optional (C_hat (B,H,dh,dh), n_hat (B,H,dh), m (B,H)).
+    Returns y (B,S,H,dh), final state.
+    """
+    B, S, H, dh = q.shape
+    Q = min(chunk, S)
+    nc = S // Q
+    assert S % Q == 0
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    lf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))      # (B,S,H)
+    li = i_pre.astype(jnp.float32)
+
+    qc = q.reshape(B, nc, Q, H, dh).transpose(1, 0, 3, 2, 4)  # (nc,B,H,Q,dh)
+    kc = k.reshape(B, nc, Q, H, dh).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(B, nc, Q, H, dh).transpose(1, 0, 3, 2, 4)
+    lfc = lf.reshape(B, nc, Q, H).transpose(1, 0, 3, 2)       # (nc,B,H,Q)
+    lic = li.reshape(B, nc, Q, H).transpose(1, 0, 3, 2)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, H, dh), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    def chunk_step(carry, inp):
+        C, n, m = carry
+        q_i, k_i, v_i, lf_i, li_i = inp                      # (B,H,Q,...)
+        b = jnp.cumsum(lf_i, axis=-1)                        # (B,H,Q)
+        total = b[..., -1]
+        # intra-chunk log decay D_ij = b_i - b_j + li_j  (j <= i)
+        D = b[..., :, None] - b[..., None, :] + li_i[..., None, :]
+        tri = jnp.tril(jnp.ones((Q, Q), bool))
+        D = jnp.where(tri, D, -jnp.inf)
+        m_intra = jnp.max(D, axis=-1)                        # (B,H,Q)
+        m_comb = jnp.maximum(m[..., None] + b, m_intra)
+        inter_coef = jnp.exp(m[..., None] + b - m_comb)      # (B,H,Q)
+        W = jnp.exp(D - m_comb[..., None])                   # (B,H,Q,Q)
+        qf, kf, vf = (t.astype(jnp.float32) for t in (q_i, k_i, v_i))
+        S_mat = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * scale * W
+        h = (jnp.einsum("bhqd,bhde->bhqe", qf * inter_coef[..., None] * scale, C)
+             + jnp.einsum("bhqk,bhkd->bhqd", S_mat, vf))
+        denom_raw = (jnp.einsum("bhqd,bhd->bhq", qf * scale, n) * inter_coef
+                     + jnp.sum(S_mat, axis=-1))
+        denom = jnp.maximum(jnp.abs(denom_raw), jnp.exp(-m_comb))
+        y = h / denom[..., None]
+        # state update
+        m_next = jnp.maximum(m + total,
+                             jnp.max(total[..., None] - b + li_i, axis=-1))
+        sdec = jnp.exp(total[..., None] - b + li_i - m_next[..., None])  # (B,H,Q)
+        C_next = (jnp.exp(m + total - m_next)[..., None, None] * C
+                  + jnp.einsum("bhq,bhqd,bhqe->bhde", sdec, kf, vf))
+        n_next = (jnp.exp(m + total - m_next)[..., None] * n
+                  + jnp.einsum("bhq,bhqd->bhd", sdec, kf))
+        return (C_next, n_next, m_next), y
+
+    (C, n, m), ys = jax.lax.scan(chunk_step, (C0, n0, m0),
+                                 (qc, kc, vc, lfc, lic))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, S, H, dh)
+    return y.astype(q.dtype), (C, n, m)
+
+
+def mlstm_decode_step(state, q, k, v, i_pre, f_pre):
+    """One-token mLSTM. q,k,v: (B,1,H,dh); returns y (B,1,H,dh), new state."""
+    C, n, m = state
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    lf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))[:, 0]  # (B,H)
+    li = i_pre.astype(jnp.float32)[:, 0]
+    m_new = jnp.maximum(lf + m, li)
+    i_s = jnp.exp(li - m_new)
+    f_s = jnp.exp(lf + m - m_new)
+    qf, kf, vf = (t.astype(jnp.float32)[:, 0] for t in (q, k, v))  # (B,H,dh)
+    C_new = f_s[..., None, None] * C + i_s[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", kf, vf)
+    n_new = f_s[..., None] * n + i_s[..., None] * kf
+    h = jnp.einsum("bhd,bhde->bhe", qf * scale, C_new)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf * scale, n_new)),
+                        jnp.exp(-m_new))
+    y = (h / denom[..., None])[:, None]
+    return y.astype(q.dtype), (C_new, n_new, m_new)
+
+
+# ------------------------------------------------------------------ blocks
+
+def init_mlstm_block(key, cfg: ModelConfig, stacked=None) -> dict:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    H = cfg.num_heads
+    ks = jax.random.split(key, 7)
+    shp = lambda *s: (stacked, *s) if stacked is not None else s
+    return {
+        "norm": init_norm(ks[0], d, "rms", stacked),
+        "up": init_linear(ks[1], d, 2 * di, False, stacked),
+        "conv_w": jax.random.normal(ks[2], shp(CONV_K, di)) * 0.1,
+        "wq": init_linear(ks[3], di, di, False, stacked),
+        "wk": init_linear(ks[4], di, di, False, stacked),
+        "wv": init_linear(ks[5], di, di, False, stacked),
+        "w_gates": {"w": jax.random.normal(ks[6], shp(di, 2 * H)) * 0.02,
+                    "b": jnp.concatenate([jnp.zeros(shp(H)),
+                                          3.0 * jnp.ones(shp(H))], -1)},
+        "headnorm": jnp.ones(shp(di), jnp.float32),
+        "down": init_linear(jax.random.fold_in(key, 9), di, d, False, stacked),
+    }
+
+
+def _causal_conv(u, w, cache=None):
+    if cache is not None:
+        u_ext = jnp.concatenate([cache.astype(u.dtype), u], axis=1)
+        new_cache = u_ext[:, -(CONV_K - 1):]
+    else:
+        u_ext = jnp.pad(u, ((0, 0), (CONV_K - 1, 0), (0, 0)))
+        new_cache = None
+    S = u.shape[1]
+    out = sum(u_ext[:, i:i + S] * w[i] for i in range(CONV_K))
+    return out, new_cache
+
+
+def mlstm_block(x, p, cfg: ModelConfig, spec: QuantSpec, state=None):
+    """state: {'C','n','m','conv'} for decode; None for train/prefill."""
+    B, S, d = x.shape
+    di = cfg.ssm_expand * d
+    H = cfg.num_heads
+    dh = di // H
+    h = rmsnorm(x, p["norm"]["scale"])
+    xz = qlinear(h, p["up"], spec)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    conv_out, new_conv = _causal_conv(
+        xi, p["conv_w"], None if state is None else state["conv"])
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    q = qlinear(conv_out, p["wq"], spec).reshape(B, S, H, dh)
+    k = qlinear(conv_out, p["wk"], spec).reshape(B, S, H, dh)
+    v = qlinear(xi, p["wv"], spec).reshape(B, S, H, dh)
+    gates = (conv_out.astype(jnp.float32) @ p["w_gates"]["w"]
+             + p["w_gates"]["b"])                            # (B,S,2H)
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)
+    if state is None:
+        y, _ = mlstm_chunked(q, k, v, i_pre, f_pre, cfg.ssm_chunk)
+        new_state = None
+    else:
+        y, (C, n, m) = mlstm_decode_step(
+            (state["C"], state["n"], state["m"]), q, k, v, i_pre, f_pre)
+        new_state = {"C": C, "n": n, "m": m, "conv": new_conv}
+    y = _headnorm(y, p["headnorm"])
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return x + qlinear(y, p["down"], spec), new_state
+
+
+def init_slstm_block(key, cfg: ModelConfig, stacked=None) -> dict:
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    ks = jax.random.split(key, 4)
+    shp = lambda *s: (stacked, *s) if stacked is not None else s
+    return {
+        "norm": init_norm(ks[0], d, "rms", stacked),
+        "w_in": init_linear(ks[1], d, 4 * d, False, stacked),
+        "r": jax.random.normal(ks[2], shp(4, H, dh, dh)) * 0.02,
+        "b": jnp.zeros(shp(4 * d)),
+        "down": init_linear(ks[3], d, d, False, stacked),
+    }
+
+
+def slstm_block(x, p, cfg: ModelConfig, spec: QuantSpec, state=None):
+    """Scalar-memory LSTM with per-head block-diagonal recurrence (scan over t).
+
+    state: {'c','n','m','h'} each (B, d) for decode.
+    """
+    B, S, d = x.shape
+    H = cfg.num_heads
+    dh = d // H
+    hin = rmsnorm(x, p["norm"]["scale"])
+    wx = qlinear(hin, p["w_in"], spec).astype(jnp.float32) + p["b"]  # (B,S,4d)
+
+    if state is None:
+        c0 = jnp.zeros((B, d), jnp.float32)
+        n0 = jnp.zeros((B, d), jnp.float32)
+        m0 = jnp.full((B, d), -1e30, jnp.float32)
+        h0 = jnp.zeros((B, d), jnp.float32)
+    else:
+        c0, n0, m0, h0 = (state[k] for k in ("c", "n", "m", "h"))
+
+    r = p["r"].astype(jnp.float32)                           # (4,H,dh,dh)
+
+    def step(carry, wx_t):
+        c, n, m, h = carry
+        hh = h.reshape(B, H, dh)
+        rec = jnp.einsum("bhd,ghde->gbhe", hh, r).reshape(4, B, d)
+        zi, zf, zz, zo = jnp.split(wx_t, 4, -1)
+        i_pre = zi + rec[0]
+        f_pre = zf + rec[1]
+        zt = jnp.tanh(zz + rec[2])
+        ot = jax.nn.sigmoid(zo + rec[3])
+        lf = jax.nn.log_sigmoid(f_pre)
+        m_new = jnp.maximum(lf + m, i_pre)
+        i_s = jnp.exp(i_pre - m_new)
+        f_s = jnp.exp(lf + m - m_new)
+        c_new = f_s * c + i_s * zt
+        n_new = jnp.maximum(f_s * n + i_s, 1e-6)
+        h_new = ot * c_new / n_new
+        return (c_new, n_new, m_new, h_new), h_new
+
+    (c, n, m, h), ys = jax.lax.scan(step, (c0, n0, m0, h0),
+                                    wx.transpose(1, 0, 2))
+    y = ys.transpose(1, 0, 2).astype(x.dtype)                # (B,S,d)
+    new_state = None
+    if state is not None:
+        new_state = {"c": c, "n": n, "m": m, "h": h}
+    return x + qlinear(y, p["down"], spec), new_state
+
+
+# ------------------------------------------------------------------ full stack
+
+def init_xlstm(cfg: ModelConfig, key) -> dict:
+    G, per = _groups(cfg)
+    n_m = per - 1
+    ks = jax.random.split(key, 5)
+    mflat = init_mlstm_block(ks[0], cfg, stacked=G * n_m)
+    mstack = jax.tree.map(lambda a: a.reshape(G, n_m, *a.shape[1:]), mflat)
+    return {
+        "embed": jax.random.normal(ks[1], (cfg.padded_vocab, cfg.d_model)) * 0.02,
+        "mlstm": mstack,
+        "slstm": init_slstm_block(ks[2], cfg, stacked=G),
+        "final_norm": init_norm(ks[3], cfg.d_model, "rms"),
+        "lm_head": jax.random.normal(ks[4], (cfg.d_model, cfg.padded_vocab)) * 0.02,
+    }
+
+
+def xlstm_forward(params, cfg: ModelConfig, segments, *, tokens=None,
+                  states: Optional[dict] = None, want_taps: bool = False,
+                  **_unused):
+    """Group scan: (per-1) mLSTM + 1 sLSTM per group; segments over groups."""
+    G, per = _groups(cfg)
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    presliced = isinstance(params["mlstm"], (list, tuple))
+    with_state = states is not None
+
+    def make_body(spec):
+        def inner(carry, xs):
+            h = carry
+            if with_state:
+                lp, st = xs
+                h2, ns = mlstm_block(h, lp, cfg, spec, state=st)
+                return h2, ns
+            h2, _ = mlstm_block(h, xs, cfg, spec)
+            return h2, jnp.zeros((), jnp.float32)
+
+        def body(carry, xs):
+            if with_state:
+                # states ride the carry; per-group slices updated in place
+                h, st = carry
+                (mp, sp), idx = xs
+                mst = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(a, idx, 0, False),
+                    st["mlstm"])
+                sst = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(a, idx, 0, False),
+                    st["slstm"])
+                h, new_mst = jax.lax.scan(inner, h, (mp, mst))
+                h, new_sst = slstm_block(h, sp, cfg, spec, state=sst)
+                upd = lambda a, u: jax.lax.dynamic_update_index_in_dim(
+                    a, u.astype(a.dtype), idx, 0)
+                st = {"mlstm": jax.tree.map(upd, st["mlstm"], new_mst),
+                      "slstm": jax.tree.map(upd, st["slstm"], new_sst)}
+                return (h, st), None
+            h = carry
+            mp, sp = xs
+            h, _ = scan_layers(inner, h, mp)
+            h, _ = slstm_block(h, sp, cfg, spec)
+            return h, jnp.zeros((), jnp.float32)
+        return body
+
+    out_states = states
+    for si, (start, end, spec) in enumerate(segments):
+        mseg = (params["mlstm"][si] if presliced
+                else _slice_stack(params["mlstm"], start, end))
+        sseg = (params["slstm"][si] if presliced
+                else _slice_stack(params["slstm"], start, end))
+        body = make_body(spec)
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        if with_state:
+            idxs = jnp.arange(start, end)
+            (x, out_states), _ = jax.lax.scan(body, (x, out_states),
+                                              ((mseg, sseg), idxs))
+        else:
+            x, _ = scan_layers(body, x, (mseg, sseg))
+
+    taps = {"hidden": x} if want_taps else None
+    x = rmsnorm(x, params["final_norm"]["scale"])
+    logits = mask_padded_vocab(x @ params["lm_head"].astype(x.dtype), cfg)
+    return logits, out_states, taps, jnp.zeros((), jnp.float32)
+
+
+def xlstm_states(cfg: ModelConfig, batch: int, as_specs: bool = False) -> dict:
+    G, per = _groups(cfg)
+    n_m = per - 1
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    H = cfg.num_heads
+    dh = di // H
+    f32 = jnp.float32
+    mk = (lambda s: jax.ShapeDtypeStruct(s, f32)) if as_specs else (
+        lambda s: jnp.zeros(s, f32))
+    neg = (lambda s: jax.ShapeDtypeStruct(s, f32)) if as_specs else (
+        lambda s: jnp.full(s, -1e30, f32))
+    return {
+        "mlstm": {"C": mk((G, n_m, batch, H, dh, dh)),
+                  "n": mk((G, n_m, batch, H, dh)),
+                  "m": neg((G, n_m, batch, H)),
+                  "conv": mk((G, n_m, batch, CONV_K - 1, di))},
+        "slstm": {"c": mk((G, batch, d)), "n": mk((G, batch, d)),
+                  "m": neg((G, batch, d)), "h": mk((G, batch, d))},
+    }

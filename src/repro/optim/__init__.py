@@ -1,0 +1,2 @@
+from .adam import AdamState, adam_init, adam_update, group_for_path  # noqa: F401
+from .schedule import linear_warmup_decay  # noqa: F401

@@ -1,0 +1,84 @@
+"""Adam with parameter groups (paper §5.2: distinct lr for weights vs
+activation-scales vs weight-scales) — implemented directly in JAX (no optax
+in this container).
+
+Groups are resolved from pytree paths: leaves named ``s_a*`` are activation
+quantization scales, ``s_w*`` weight quantization scales, everything else is
+a weight. Scales are clamped positive after each update (LSQ stability).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    m: dict
+    v: dict
+
+
+GROUP_WEIGHTS = "weights"
+GROUP_ACT_SCALE = "act_scale"
+GROUP_W_SCALE = "weight_scale"
+
+
+def group_for_path(path) -> str:
+    keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+    for k in reversed(keys):
+        if isinstance(k, str) and k.startswith("s_a"):
+            return GROUP_ACT_SCALE
+        if isinstance(k, str) and k.startswith("s_w"):
+            return GROUP_W_SCALE
+    return GROUP_WEIGHTS
+
+
+def adam_init(params) -> AdamState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return AdamState(step=jnp.zeros((), jnp.int32), m=zeros,
+                     v=jax.tree.map(jnp.zeros_like, zeros))
+
+
+def adam_update(params, grads, state: AdamState, *, lr_by_group: dict,
+                schedule_fn: Callable, b1=0.9, b2=0.999, eps=1e-8,
+                grad_clip: float = 0.0):
+    """Returns (new_params, new_state). lr_by_group: group name -> base lr."""
+    step = state.step + 1
+    sched = schedule_fn(step)
+
+    if grad_clip:
+        leaves = jax.tree.leaves(grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in leaves))
+        factor = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+        grads = jax.tree.map(lambda g: g * factor, grads)
+
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(path, p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * jnp.square(g32)
+        group = group_for_path(path)
+        lr = lr_by_group[group] * sched
+        delta = lr * (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+        p_new = p.astype(jnp.float32) - delta
+        if group in (GROUP_ACT_SCALE, GROUP_W_SCALE):
+            p_new = jnp.maximum(p_new, 1e-8)  # scales stay positive
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree.structure(params)
+    gl = jax.tree.leaves(grads)
+    ml = jax.tree.leaves(state.m)
+    vl = jax.tree.leaves(state.v)
+    out = [upd(path, p, g, m, v)
+           for (path, p), g, m, v in zip(flat, gl, ml, vl)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_params, AdamState(step=step, m=new_m, v=new_v)

@@ -1,0 +1,16 @@
+"""LR schedules. Paper §5.2: grow linearly for 10% of steps, decay to 0."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup_decay(total_steps: int, warmup_frac: float = 0.10):
+    warmup = max(1, int(total_steps * warmup_frac))
+
+    def fn(step):
+        s = step.astype(jnp.float32)
+        up = s / warmup
+        down = (total_steps - s) / max(1, total_steps - warmup)
+        return jnp.clip(jnp.minimum(up, down), 0.0, 1.0)
+
+    return fn

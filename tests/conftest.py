@@ -1,0 +1,9 @@
+# NOTE: no XLA device-count flags here — smoke tests and benches must see the
+# real (single-CPU) device. Only launch/dryrun.py forces 512 placeholders.
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

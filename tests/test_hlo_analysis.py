@@ -1,0 +1,103 @@
+"""Unit tests for the HLO roofline analyzer (launch/hlo_analysis.py).
+
+These pin the trip-count and slice-aware accounting semantics on handcrafted
+HLO text, so analyzer regressions can't silently skew the roofline tables.
+"""
+import pytest
+
+from repro.launch.hlo_analysis import analyze, parse_computations
+
+SIMPLE = """
+HloModule test
+
+%body (p: (s32[], f32[128,128])) -> (s32[], f32[128,128]) {
+  %p = (s32[], f32[128,128]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[128,128]{1,0} get-tuple-element(%p), index=1
+  %w = f32[128,128]{1,0} constant({...})
+  %d = f32[128,128]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %t = (s32[], f32[128,128]{1,0}) tuple(%i, %d)
+}
+
+%cond (p: (s32[], f32[128,128])) -> pred[] {
+  %p = (s32[], f32[128,128]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: f32[128,128]) -> f32[128,128] {
+  %a = f32[128,128]{1,0} parameter(0)
+  %c0 = s32[] constant(0)
+  %t0 = (s32[], f32[128,128]{1,0}) tuple(%c0, %a)
+  %wh = (s32[], f32[128,128]{1,0}) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"7"}}
+  ROOT %out = f32[128,128]{1,0} get-tuple-element(%wh), index=1
+}
+"""
+
+
+def test_while_trip_count_multiplies_dot_flops():
+    h = analyze(SIMPLE)
+    # 2 * 128^3 per dot * 7 trips
+    assert h["flops"] == pytest.approx(7 * 2 * 128 ** 3)
+    assert h["int_flops"] == 0
+
+
+COLLECTIVE = """
+HloModule test
+
+ENTRY %main (a: f32[64,64]) -> f32[64,64] {
+  %a = f32[64,64]{1,0} parameter(0)
+  %ar = f32[64,64]{1,0} all-reduce(%a), replica_groups={}, to_apply=%add
+  %ag = f32[64,64]{1,0} all-gather(%ar), dimensions={0}
+  ROOT %o = f32[64,64]{1,0} copy(%ag)
+}
+"""
+
+
+def test_collective_bytes_and_ar_factor():
+    h = analyze(COLLECTIVE)
+    sz = 64 * 64 * 4
+    assert h["collective_bytes"]["all-reduce"] == 2 * sz   # reduce+broadcast
+    assert h["collective_bytes"]["all-gather"] == sz
+    assert h["collective_bytes_total"] == 3 * sz
+
+
+SLICED = """
+HloModule test
+
+ENTRY %main (stack: f32[10,64,64], idx: s32[]) -> f32[64,64] {
+  %stack = f32[10,64,64]{2,1,0} parameter(0)
+  %idx = s32[] parameter(1)
+  %z = s32[] constant(0)
+  ROOT %sl = f32[1,64,64]{2,1,0} dynamic-slice(%stack, %idx, %z, %z), dynamic_slice_sizes={1,64,64}
+}
+"""
+
+
+def test_dynamic_slice_charges_slice_not_buffer():
+    h = analyze(SLICED)
+    # 2 * slice bytes, NOT 10x the stack
+    assert h["hbm_bytes"] == 2 * 64 * 64 * 4
+
+
+def test_parse_computations_names():
+    comps = parse_computations(SIMPLE)
+    assert "body" in comps and "cond" in comps and "main" in comps
+    opcodes = {op.opcode for op in comps["body"].ops}
+    assert "dot" in opcodes
+
+
+def test_int_dot_classified():
+    hlo = """
+HloModule t
+
+ENTRY %main (a: s8[32,32], b: s8[32,32]) -> s32[32,32] {
+  %a = s8[32,32]{1,0} parameter(0)
+  %b = s8[32,32]{1,0} parameter(1)
+  ROOT %d = s32[32,32]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+    h = analyze(hlo)
+    assert h["int_flops"] == 2 * 32 ** 3
+    assert h["float_flops"] == 0

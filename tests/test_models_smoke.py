@@ -1,0 +1,154 @@
+"""Per-arch smoke tests: reduced config, one forward/train step, decode step.
+
+Covers all 10 assigned architectures + the paper's TinyBERT4 (deliverable f).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_config, input_specs, reduced, \
+    shape_applicable
+from repro.configs.archs import ASSIGNED
+from repro.core.policy import QuantPolicy
+from repro.models import api
+from repro.models.transformer import lm_loss
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _inputs(cfg, B=2, S=16):
+    if cfg.input_kind == "embeds":
+        return {"src_embeds": jax.random.normal(KEY, (B, S, cfg.d_model)),
+                "tokens": jnp.ones((B, S), jnp.int32)}
+    if cfg.input_kind == "tokens+patches":
+        return {"tokens": jnp.ones((B, S), jnp.int32),
+                "patch_embeds": jax.random.normal(
+                    KEY, (B, cfg.num_patches, cfg.d_model)),
+                "patch_mask": jnp.zeros((B, S), bool).at[:, :4].set(True)}
+    return {"tokens": jnp.ones((B, S), jnp.int32)}
+
+
+def _policy(cfg, mode="fake"):
+    n = cfg.dec_layers if cfg.family == "encdec" else cfg.num_layers
+    return QuantPolicy(num_layers=n, mode=mode, last_k_int4=n // 2)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED + ["tinybert4"])
+def test_forward_shapes_and_finite(arch):
+    cfg = reduced(get_config(arch))
+    params = api.init_model(cfg, KEY)
+    segs = api.segments_for(cfg, _policy(cfg))
+    B, S = 2, 16
+    logits, _, _, aux = api.forward(params, cfg, segs, **_inputs(cfg, B, S))
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_train_step_decreases_loss(arch):
+    """A few SGD steps on the QAT fake-quant loss must reduce it."""
+    cfg = reduced(get_config(arch))
+    params = api.init_model(cfg, KEY)
+    segs = api.segments_for(cfg, _policy(cfg))
+    B, S = 2, 16
+    inputs = _inputs(cfg, B, S)
+    labels = jnp.ones((B, S), jnp.int32)
+
+    @jax.jit
+    def step(p):
+        def loss_fn(pp):
+            logits, _, _, aux = api.forward(pp, cfg, segs, **inputs)
+            return lm_loss(logits, labels) + aux
+        l, g = jax.value_and_grad(loss_fn)(p)
+        return jax.tree.map(lambda a, b: a - 0.05 * b, p, g), l
+
+    losses = []
+    for _ in range(5):
+        params, l = step(params)
+        losses.append(float(l))
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0], losses
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_decode_step(arch):
+    cfg = reduced(get_config(arch))
+    params = api.init_model(cfg, KEY)
+    segs = api.segments_for(cfg, _policy(cfg))
+    B = 2
+    state = api.decode_state(cfg, B, 32, dtype=jnp.float32)
+    extra = api.decode_extra_inputs(cfg, B, 16, dtype=jnp.float32)
+    tok = jnp.ones((B, 1), jnp.int32)
+    logits, state, _, _ = api.forward(params, cfg, segs, state=state,
+                                      tokens=tok, **extra)
+    logits2, state, _, _ = api.forward(params, cfg, segs, state=state,
+                                       tokens=tok, **extra)
+    assert logits2.shape == (B, 1, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits2, np.float32)).all()
+
+
+def test_decode_matches_full_forward():
+    """Incremental decode == full causal forward (dense GQA arch)."""
+    cfg = reduced(get_config("internlm2-20b"))
+    params = api.init_model(cfg, KEY)
+    segs = api.segments_for(cfg, None)
+    T = 8
+    toks = jax.random.randint(KEY, (2, T), 0, cfg.vocab_size)
+    full, *_ = api.forward(params, cfg, segs, tokens=toks)
+    state = api.decode_state(cfg, 2, 16, dtype=jnp.float32)
+    outs = []
+    for t in range(T):
+        lg, state, _, _ = api.forward(params, cfg, segs, state=state,
+                                      tokens=toks[:, t:t + 1])
+        outs.append(lg)
+    inc = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(inc), np.asarray(full),
+                               atol=5e-4, rtol=1e-3)
+
+
+def test_shape_applicability_matrix():
+    """long_500k runs only for sub-quadratic archs (DESIGN.md §5)."""
+    runs = {}
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        ok, _ = shape_applicable(cfg, SHAPES["long_500k"])
+        runs[arch] = ok
+    assert runs["xlstm-1.3b"] and runs["zamba2-2.7b"]
+    assert sum(runs.values()) == 2
+    for arch in ASSIGNED:  # all other shapes apply to every arch
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert shape_applicable(get_config(arch), SHAPES[s])[0]
+
+
+def test_input_specs_cover_every_cell():
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        for name, shape in SHAPES.items():
+            if not shape_applicable(cfg, shape)[0]:
+                continue
+            specs = input_specs(cfg, shape)
+            assert specs, (arch, name)
+
+
+def test_moe_sorted_matches_dense():
+    """Sort-based MoE dispatch == dense one-hot dispatch (no-overflow regime);
+    the sorted path exists to kill the dispatch-einsum FLOPs (SS Perf)."""
+    from repro.models.layers import QuantSpec
+    from repro.models.transformer import init_moe, moe_apply, moe_apply_sorted
+    cfg = reduced(get_config("qwen2-moe-a2.7b")).replace(
+        capacity_factor=8.0, moe_group_size=9999)
+    p = init_moe(jax.random.PRNGKey(0), cfg, stacked=None)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    y_dense, aux_d = moe_apply(x, p, cfg, QuantSpec())
+    y_sorted, aux_s = moe_apply_sorted(x, p, cfg, QuantSpec())
+    np.testing.assert_allclose(np.asarray(y_sorted), np.asarray(y_dense),
+                               atol=2e-5)
+    assert float(aux_d) == pytest.approx(float(aux_s))
+    # differentiable (scatter-add / gather paths)
+    g = jax.grad(lambda pp: float(0) + jax.numpy.sum(
+        moe_apply_sorted(x, pp, cfg, QuantSpec())[0] ** 2))(p)
+    gn = sum(float(jax.numpy.sum(jax.numpy.abs(l)))
+             for l in jax.tree.leaves(g))
+    assert np.isfinite(gn) and gn > 0
