@@ -20,10 +20,12 @@ def main() -> None:
     args = p.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
-    from . import roofline, table1_glue, table2_speedup, table3_ablation
+    from . import (roofline, serve_latency, table1_glue, table2_speedup,
+                   table3_ablation)
     sections = [("table1", lambda: table1_glue.main(quick=args.quick)),
                 ("table2", lambda: table2_speedup.main(quick=args.quick)),
                 ("table3", lambda: table3_ablation.main(quick=args.quick)),
+                ("serve", lambda: serve_latency.main(quick=args.quick)),
                 ("roofline", roofline.main)]
     failures = 0
     for name, fn in sections:

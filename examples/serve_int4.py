@@ -1,10 +1,11 @@
 """Serve a quantized model with batched requests (the paper's deployment).
 
 Builds an int4/int8 deployed model (calibrate -> pack), spins up the
-continuous-batching engine, submits a burst of requests and reports
-throughput. Identical code path to launch/serve.py's CLI; shown here as a
-library-use example. On TPU, pass use_pallas=True to route the matmuls
-through the int4/int8 Pallas kernels.
+continuous-batching engine from ``repro.serving`` (DESIGN.md §7) — chunked
+prefill + slot-isolated KV cache + latency metrics — submits a burst of
+requests and reports throughput. On TPU, pass use_pallas=True to
+api.segments_for to route the matmuls through the int4/int8 Pallas kernels
+(with the fused dequant+bias+GELU decode epilogue on gelu-FFN archs).
 
 Run:  PYTHONPATH=src python examples/serve_int4.py
 """
@@ -17,7 +18,7 @@ from repro.configs import get_config, reduced
 from repro.core.policy import QuantPolicy
 from repro.core.qat import (calibrate_weight_scales, default_bits_fn,
                             deploy_params)
-from repro.launch.serve import Request, ServingEngine
+from repro.serving import Request, ServingEngine
 from repro.models import api
 
 
@@ -48,6 +49,7 @@ def main():
     toks = sum(len(r.out) for r in eng.done)
     print(f"served {len(eng.done)} requests / {toks} tokens in {steps} "
           f"engine steps, {dt:.2f}s ({toks/dt:.1f} tok/s on CPU)")
+    print("metrics:", eng.metrics.report())
     print("sample output:", eng.done[0].out.tolist())
 
 

@@ -28,9 +28,9 @@ def compressed_grad_mean(grads, axis_names, method: str = "bf16",
     Must be called inside shard_map with ``axis_names`` manual axes.
     Returns (mean_grads, new_error_state).
     """
-    n = 1
-    for a in axis_names:
-        n *= jax.lax.axis_size(a)
+    # axis size via psum(1): works on every jax version (lax.axis_size is
+    # newer than the pinned 0.4.x line)
+    n = jax.lax.psum(1, axis_names)
 
     if method == "none":
         return jax.tree.map(

@@ -37,6 +37,15 @@ def _unpack_nibbles(wp: jax.Array) -> jax.Array:
     return jnp.stack([lo, hi], axis=1).reshape(kk * 2, n)
 
 
+def _apply_epilogue(r: jax.Array, act: str) -> jax.Array:
+    """f32 epilogue activation; mirrors models.layers.act_fn exactly."""
+    if act == "gelu":
+        return jax.nn.gelu(r, approximate=True)
+    if act == "relu":
+        return jnp.maximum(r, 0.0)
+    raise ValueError(f"unsupported fused activation {act!r}")
+
+
 def _kernel(x_ref, wp_ref, sa_ref, sw_ref, out_ref, acc_ref, *, n_k: int):
     k = pl.program_id(2)
 
@@ -54,6 +63,33 @@ def _kernel(x_ref, wp_ref, sa_ref, sw_ref, out_ref, acc_ref, *, n_k: int):
         scale = sa_ref[0, 0] * sw_ref[...]
         out_ref[...] = (acc_ref[...].astype(jnp.float32) * scale
                         ).astype(out_ref.dtype)
+
+
+def _fused_kernel(x_ref, wp_ref, sa_ref, sw_ref, b_ref, out_ref, acc_ref, *,
+                  n_k: int, act: str):
+    """int4 matmul with the full decode-layer epilogue fused: the int32
+    accumulator is dequantized, biased and activated in VMEM on the last K
+    step — the (bm, bn) float intermediate never round-trips HBM (the
+    two-kernel path pays 2x(M, N) f32 of traffic for bias+act)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w8 = _unpack_nibbles(wp_ref[...])
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w8, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        scale = sa_ref[0, 0] * sw_ref[...]
+        r = acc_ref[...].astype(jnp.float32) * scale
+        r = r + b_ref[...]
+        if act != "none":
+            r = _apply_epilogue(r, act)
+        out_ref[...] = r.astype(out_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "out_dtype",
@@ -85,3 +121,42 @@ def int4_matmul_pallas(x8: jax.Array, wp: jax.Array, s_a: jax.Array,
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
     )(x8, wp, s_a.reshape(1, 1), s_w)
+
+
+@functools.partial(jax.jit, static_argnames=("act", "bm", "bn", "bk",
+                                             "out_dtype", "interpret"))
+def int4_matmul_fused_pallas(x8: jax.Array, wp: jax.Array, s_a: jax.Array,
+                             s_w: jax.Array, bias: jax.Array, *,
+                             act: str = "none", bm=DEFAULT_BM, bn=DEFAULT_BN,
+                             bk=DEFAULT_BK, out_dtype=jnp.float32,
+                             interpret: bool = False) -> jax.Array:
+    """Fused decode path: int4 matmul + dequant + bias + activation epilogue.
+
+    Same operands as :func:`int4_matmul_pallas` plus ``bias: (1, N) f32`` and
+    a static ``act`` ('none' | 'gelu' | 'relu'). The epilogue runs in f32, so
+    for f32 outputs the result is bit-identical to the unfused composition
+    (matmul kernel -> +bias -> act_fn) while writing the (M, N) intermediate
+    to HBM exactly once instead of three times.
+    """
+    M, K = x8.shape
+    Kp, N = wp.shape
+    assert Kp * 2 == K, (x8.shape, wp.shape)
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0 and bk % 2 == 0
+    n_k = K // bk
+    grid = (M // bm, N // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, n_k=n_k, act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk // 2, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(x8, wp, s_a.reshape(1, 1), s_w, bias)

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from .act_quant import act_quant_pallas
-from .int4_matmul import int4_matmul_pallas
+from .int4_matmul import int4_matmul_fused_pallas, int4_matmul_pallas
 from .int8_matmul import int8_matmul_pallas
 
 
@@ -55,8 +55,14 @@ def int8_matmul(x: jax.Array, w8: jax.Array, s_a: jax.Array, s_w: jax.Array,
 
 
 def int4_matmul(x: jax.Array, wp: jax.Array, s_a: jax.Array, s_w: jax.Array,
-                a_bits: int = 8) -> jax.Array:
-    """x: (M, K) float; wp: (K/2, N) packed nibbles."""
+                a_bits: int = 8, bias: jax.Array | None = None,
+                act: str | None = None) -> jax.Array:
+    """x: (M, K) float; wp: (K/2, N) packed nibbles.
+
+    ``act`` selects the fused decode path: dequant + bias + activation run in
+    the kernel epilogue (one HBM write of the (M, N) result instead of three).
+    With ``act`` set, ``bias`` (or zeros) is folded in as well.
+    """
     x8 = act_quant(x, s_a, bits=a_bits)
     M, K = x8.shape
     if wp.shape[0] * 2 != K:  # packing padded K to even; pad x to match
@@ -66,6 +72,12 @@ def int4_matmul(x: jax.Array, wp: jax.Array, s_a: jax.Array, s_w: jax.Array,
     bm = _pick(M, 128)
     bn = _pick(N, 128)
     bk = _pick(K, 512, even=True)
+    if act is not None:
+        b = (jnp.zeros((1, N), jnp.float32) if bias is None
+             else bias.reshape(1, N).astype(jnp.float32))
+        return int4_matmul_fused_pallas(
+            x8, wp, s_a, s_w.reshape(1, N), b, act=act, bm=bm, bn=bn, bk=bk,
+            out_dtype=x.dtype, interpret=not _on_tpu())
     return int4_matmul_pallas(x8, wp, s_a, s_w.reshape(1, N), bm=bm, bn=bn,
                               bk=bk, out_dtype=x.dtype,
                               interpret=not _on_tpu())

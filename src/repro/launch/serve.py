@@ -1,100 +1,19 @@
-"""Batched int4/int8 serving driver (the paper's deployment side).
+"""Thin CLI shim over the serving subsystem (repro/serving — DESIGN.md §7).
 
-Continuous-batching-lite: requests join a fixed-size slot table; every engine
-step decodes one token for all active slots with the deployed integer model
-(packed int4/int8 weights + on-the-fly activation quantization); finished
-slots are refilled from the queue. Slot state is the per-layer KV cache
-(or SSM state), written one token per step (models/*).
+The engine itself lives in ``repro.serving``: scheduler (queue + slot table),
+kv_cache (per-slot cursors), engine (prefill/decode step loop), metrics
+(latency/throughput). ``Request`` and ``ServingEngine`` stay importable from
+here for backward compatibility.
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
-from typing import Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-
-@dataclasses.dataclass
-class Request:
-    prompt: np.ndarray          # (prompt_len,) int32
-    max_new_tokens: int = 16
-    out: Optional[np.ndarray] = None
-
-
-class ServingEngine:
-    """Fixed-slot decode engine over the deployed quantized model."""
-
-    def __init__(self, params_int, cfg, segments, *, slots: int = 8,
-                 max_len: int = 512, dtype=jnp.float32):
-        from ..models import api
-        self.api = api
-        self.cfg = cfg
-        self.segments = segments
-        self.params = params_int
-        self.slots = slots
-        self.max_len = max_len
-        self.state = api.decode_state(cfg, slots, max_len, dtype=dtype)
-        self.active = [None] * slots          # slot -> Request
-        self.generated: list[list[int]] = [[] for _ in range(slots)]
-        self.pos = np.zeros(slots, np.int32)  # per-slot prompt cursor
-        self.queue: list[Request] = []
-        self.done: list[Request] = []
-
-        def step(params, state, tokens):
-            logits, new_state, _, _ = api.forward(
-                params, cfg, segments, state=state, tokens=tokens)
-            return jnp.argmax(logits[:, -1], axis=-1), new_state
-
-        self._step = jax.jit(step, donate_argnums=(1,))
-
-    def submit(self, req: Request):
-        self.queue.append(req)
-
-    def _admit(self):
-        for s in range(self.slots):
-            if self.active[s] is None and self.queue:
-                self.active[s] = self.queue.pop(0)
-                self.generated[s] = []
-                self.pos[s] = 0
-
-    def engine_step(self):
-        """One decode step for every active slot (inactive slots run pad)."""
-        self._admit()
-        toks = np.zeros((self.slots, 1), np.int32)
-        for s, req in enumerate(self.active):
-            if req is None:
-                continue
-            if self.pos[s] < len(req.prompt):       # still feeding the prompt
-                toks[s, 0] = req.prompt[self.pos[s]]
-            elif self.generated[s]:
-                toks[s, 0] = self.generated[s][-1]
-            else:
-                toks[s, 0] = req.prompt[-1]
-        next_tok, self.state = self._step(self.params, self.state,
-                                          jnp.asarray(toks))
-        next_tok = np.asarray(next_tok)
-        for s, req in enumerate(self.active):
-            if req is None:
-                continue
-            self.pos[s] += 1
-            if self.pos[s] >= len(req.prompt):
-                self.generated[s].append(int(next_tok[s]))
-                if len(self.generated[s]) >= req.max_new_tokens:
-                    req.out = np.array(self.generated[s], np.int32)
-                    self.done.append(req)
-                    self.active[s] = None
-
-    def run_until_drained(self, max_steps: int = 10000):
-        steps = 0
-        while (self.queue or any(a is not None for a in self.active)) \
-                and steps < max_steps:
-            self.engine_step()
-            steps += 1
-        return steps
+from ..serving import Request, ServingEngine  # noqa: F401  (compat re-export)
 
 
 def main(argv=None):
@@ -110,6 +29,11 @@ def main(argv=None):
     p.add_argument("--requests", type=int, default=16)
     p.add_argument("--slots", type=int, default=4)
     p.add_argument("--int4-last-k", type=int, default=-1)
+    p.add_argument("--prefill-mode", default="auto",
+                   choices=["auto", "chunked", "token"])
+    p.add_argument("--use-pallas", action="store_true",
+                   help="route matmuls through the int4/int8 Pallas kernels "
+                        "(fused decode epilogue; interpret mode off-TPU)")
     args = p.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -118,14 +42,15 @@ def main(argv=None):
     n_units = cfg.dec_layers if cfg.family == "encdec" else cfg.num_layers
     k4 = args.int4_last_k if args.int4_last_k >= 0 else n_units // 2
     policy = QuantPolicy(num_layers=n_units, mode="int", last_k_int4=k4)
-    segments = api.segments_for(cfg, policy)
+    segments = api.segments_for(cfg, policy, use_pallas=args.use_pallas,
+                                fuse_epilogue=args.use_pallas)
 
     params = api.init_model(cfg, jax.random.PRNGKey(0))
     params = calibrate_weight_scales(params, default_bits_fn(cfg, policy))
     params_int = deploy_params(params, cfg, segments)
 
     eng = ServingEngine(params_int, cfg, segments, slots=args.slots,
-                        max_len=128)
+                        max_len=128, prefill_mode=args.prefill_mode)
     rng = np.random.default_rng(0)
     t0 = time.time()
     for _ in range(args.requests):
@@ -138,6 +63,7 @@ def main(argv=None):
     print(f"[serve] {len(eng.done)} requests, {total_tokens} tokens, "
           f"{steps} engine steps, {dt:.2f}s "
           f"({total_tokens / max(dt, 1e-9):.1f} tok/s)")
+    print(f"[serve] {eng.metrics.report()}")
 
 
 if __name__ == "__main__":

@@ -17,7 +17,7 @@ from . import encdec, hybrid, transformer, xlstm
 
 
 def segments_for(cfg: ModelConfig, policy: Optional[QuantPolicy],
-                 use_pallas: bool = False):
+                 use_pallas: bool = False, fuse_epilogue: bool = False):
     if policy is None:
         n = _segment_units(cfg)
         return [(0, n, QuantSpec())]
@@ -28,7 +28,7 @@ def segments_for(cfg: ModelConfig, policy: Optional[QuantPolicy],
         # segments over decoder layers
         assert policy.num_layers == cfg.dec_layers, \
             f"encdec policy covers decoder layers ({cfg.dec_layers})"
-    return transformer.segments_from_policy(policy, use_pallas)
+    return transformer.segments_from_policy(policy, use_pallas, fuse_epilogue)
 
 
 def _segment_units(cfg: ModelConfig) -> int:
@@ -68,19 +68,30 @@ def forward(params, cfg: ModelConfig, segments, *, state=None,
 
 
 def decode_state(cfg: ModelConfig, batch: int, max_len: int,
-                 dtype=jnp.bfloat16, as_specs: bool = False):
+                 dtype=jnp.bfloat16, as_specs: bool = False,
+                 per_slot_len: bool = False):
+    """per_slot_len=True allocates a (batch,) length vector instead of the
+    scalar cursor, so a serving slot table can refill slots independently
+    (transformer-family KV caches only)."""
     if cfg.family == "xlstm":
+        if per_slot_len:
+            raise ValueError("per_slot_len: transformer-family caches only")
         return xlstm.xlstm_states(cfg, batch, as_specs=as_specs)
     if cfg.family == "hybrid":
+        if per_slot_len:
+            raise ValueError("per_slot_len: transformer-family caches only")
         return hybrid.hybrid_states(cfg, batch, max_len, dtype, as_specs)
     if cfg.family == "encdec":
+        if per_slot_len:
+            raise ValueError("per_slot_len: transformer-family caches only")
         L = cfg.dec_layers
         mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if as_specs else (
             lambda s, d: jnp.zeros(s, d))
         return {"k": mk((L, batch, max_len, cfg.num_kv_heads, cfg.hd), dtype),
                 "v": mk((L, batch, max_len, cfg.num_kv_heads, cfg.hd), dtype),
                 "len": mk((), jnp.int32)}
-    return transformer.lm_caches(cfg, batch, max_len, dtype, as_specs)
+    return transformer.lm_caches(cfg, batch, max_len, dtype, as_specs,
+                                 per_slot_len=per_slot_len)
 
 
 def decode_extra_inputs(cfg: ModelConfig, batch: int, src_len: int,

@@ -136,12 +136,19 @@ def chunked_attention(q, k, v, *, causal: bool, chunk: int,
 
 def cached_decode_attention(q, k_cache, v_cache, k_new, v_new, length):
     """Decode attention: q (B,Sq,H,dh) over cache (B,Smax,H,dh) masked to
-    ``length`` plus Sq new tokens (causal among themselves). fp32 softmax."""
+    ``length`` plus Sq new tokens (causal among themselves). fp32 softmax.
+
+    ``length`` is a scalar (whole-batch cursor) or (B,) per-slot lengths —
+    the serving slot table (repro/serving) refills slots independently, so
+    each slot masks its own prefix of the cache.
+    """
     B, Sq, H, dh = q.shape
     Smax = k_cache.shape[1]
     scale = 1.0 / jnp.sqrt(jnp.float32(dh))
     s1 = jnp.einsum("bqhd,bkhd->bhqk", q, k_cache).astype(jnp.float32) * scale
-    valid = jnp.arange(Smax)[None, None, None, :] < length
+    length = jnp.asarray(length)
+    lb = length.reshape(-1, 1, 1, 1) if length.ndim else length
+    valid = jnp.arange(Smax)[None, None, None, :] < lb
     s1 = jnp.where(valid, s1, NEG_INF)
     s2 = jnp.einsum("bqhd,bkhd->bhqk", q, k_new).astype(jnp.float32) * scale
     if Sq > 1:
@@ -187,8 +194,12 @@ def attention_block(x: jax.Array, p: dict, *, n_heads: int, n_kv: int, hd: int,
                 "v": v.reshape(B, v.shape[1], -1)}
 
     if positions is None:
-        offset = cache["len"] if cache is not None else 0
-        positions = jnp.arange(Sq)[None, :] + offset
+        if cache is not None:
+            off = jnp.asarray(cache["len"])  # scalar or (B,) per-slot
+            positions = jnp.arange(Sq)[None, :] + (
+                off[:, None] if off.ndim else off)
+        else:
+            positions = jnp.arange(Sq)[None, :]
     if rope and kv_input is None:
         cos, sin = rope_tables(positions, hd, rope_theta)
         q = apply_rope(q, cos, sin)

@@ -35,6 +35,7 @@ class QuantSpec:
     a_bits: int = 0
     grad_mode: str = "mse"
     use_pallas: bool = False    # int mode: pallas kernels (TPU) vs jnp int path
+    fuse_epilogue: bool = False  # int4 pallas: fold bias+act into the matmul
 
     @property
     def enabled(self) -> bool:
@@ -54,18 +55,25 @@ def _int_matmul_jnp(x8: jax.Array, w8: jax.Array) -> jax.Array:
         preferred_element_type=jnp.int32)
 
 
-def qlinear(x: jax.Array, p: dict, spec: QuantSpec) -> jax.Array:
+def qlinear(x: jax.Array, p: dict, spec: QuantSpec,
+            act: Optional[str] = None) -> jax.Array:
     """Quantizable linear. p holds either fp or deployed-int parameters.
 
     fp params:  {'w': (K, N), 'b': (N,)?, 's_w': (1, N), 's_a': ()}
     int params: {'wq': packed, 's_w': (1, N), 's_a': (), 'b': (N,)?, 'w_bits': static}
+
+    ``act`` (fused-epilogue callers only): fold this activation into the int4
+    Pallas kernel's epilogue together with dequant+bias. Only valid on the
+    deployed int4 Pallas path — the caller must apply the activation itself
+    everywhere else (see ffn_apply).
     """
     from ..core import calibration
     if calibration.active():
         calibration.record_input(x)
     b = p.get("b")
     if spec.mode == "int":
-        return _qlinear_int(x, p, spec)
+        return _qlinear_int(x, p, spec, act=act)
+    assert act is None, "fused act requires the deployed int4 Pallas path"
     w = p["w"]
     if spec.mode == "fake" and spec.enabled:
         w = fake_quant(w, p["s_w"], spec.w_bits, spec.grad_mode)
@@ -77,20 +85,30 @@ def qlinear(x: jax.Array, p: dict, spec: QuantSpec) -> jax.Array:
     return out
 
 
-def _qlinear_int(x: jax.Array, p: dict, spec: QuantSpec) -> jax.Array:
+def _qlinear_int(x: jax.Array, p: dict, spec: QuantSpec,
+                 act: Optional[str] = None) -> jax.Array:
     """Deployed integer path. Activations quantized on the fly (per-tensor scale)."""
     s_a, s_w = p["s_a"], p["s_w"]
     a_bits = spec.a_bits or 8
+    b = p.get("b")
     if spec.use_pallas:
         from ..kernels import ops as kops  # lazy: keeps CPU-only paths pallas-free
         lead = x.shape[:-1]
         x2 = x.reshape(-1, x.shape[-1])
         if spec.w_bits == 4:
+            if act is not None:
+                # fused decode path: dequant + bias + activation inside the
+                # kernel epilogue — no materialized (M, N) intermediate
+                out = kops.int4_matmul(x2, p["wq"], s_a, s_w, a_bits=a_bits,
+                                       bias=b, act=act)
+                return out.reshape(*lead, -1)
             out = kops.int4_matmul(x2, p["wq"], s_a, s_w, a_bits=a_bits)
         else:
+            assert act is None, "fused epilogue is int4-only"
             out = kops.int8_matmul(x2, p["wq"], s_a, s_w, a_bits=a_bits)
         out = out.reshape(*lead, -1)
     else:
+        assert act is None, "fused act requires the int4 Pallas path"
         x8 = quantize_to_int(x, s_a, a_bits)
         w8 = unpack_int4(p["wq"], axis=-2) if spec.w_bits == 4 else p["wq"]
         k = x.shape[-1]
@@ -98,7 +116,6 @@ def _qlinear_int(x: jax.Array, p: dict, spec: QuantSpec) -> jax.Array:
             w8 = jax.lax.slice_in_dim(w8, 0, k, axis=-2)
         acc = _int_matmul_jnp(x8, w8)
         out = (acc.astype(jnp.float32) * (s_a * s_w)).astype(x.dtype)
-    b = p.get("b")
     if b is not None:
         out = out + b.astype(out.dtype)
     return out

@@ -26,14 +26,16 @@ from .layers import (QuantSpec, act_fn, init_linear, init_norm, layernorm,
 
 # ------------------------------------------------------------------ policy → segments
 
-def segments_from_policy(policy: QuantPolicy, use_pallas: bool = False
+def segments_from_policy(policy: QuantPolicy, use_pallas: bool = False,
+                         fuse_epilogue: bool = False
                          ) -> list[tuple[int, int, QuantSpec]]:
     """Contiguous (start, end, QuantSpec) runs of equal bit-width."""
     segs: list[tuple[int, int, QuantSpec]] = []
     for l in range(policy.num_layers):
         wb, ab = policy.weight_bits(l) or 0, policy.act_bits(l) or 0
         spec = QuantSpec(mode=policy.mode, w_bits=wb, a_bits=ab,
-                         grad_mode=policy.grad_mode, use_pallas=use_pallas)
+                         grad_mode=policy.grad_mode, use_pallas=use_pallas,
+                         fuse_epilogue=fuse_epilogue)
         if segs and segs[-1][2] == spec:
             segs[-1] = (segs[-1][0], l + 1, spec)
         else:
@@ -110,7 +112,12 @@ def ffn_apply(x, p, cfg: ModelConfig, spec: QuantSpec):
         h = jax.nn.silu(qlinear(x, p["w1"], spec).astype(jnp.float32)).astype(x.dtype)
         h = h * qlinear(x, p["w3"], spec)
     else:
-        h = act_fn(cfg.act)(qlinear(x, p["w1"], spec))
+        # non-gated FFN: the activation can ride the int4 kernel's fused
+        # dequant+bias+GELU epilogue (one HBM round-trip instead of three)
+        fused = (spec.mode == "int" and spec.use_pallas and spec.fuse_epilogue
+                 and spec.w_bits == 4 and cfg.act in ("gelu", "relu"))
+        h1 = qlinear(x, p["w1"], spec, act=cfg.act if fused else None)
+        h = h1 if fused else act_fn(cfg.act)(h1)
     return qlinear(h, p["w2"], spec)
 
 
@@ -391,8 +398,24 @@ def lm_forward(params, cfg: ModelConfig, segments, *, tokens=None,
 
     def write_new_kv(cs, idx, new_kv):
         """insert (B, Sq, Hkv, dh) new-token k/v at [layer=idx, :, len] —
-        a one-token write instead of a full-cache copy per layer."""
+        a one-token write instead of a full-cache copy per layer.
+
+        With per-slot lengths (cs['len'] shaped (B,), serving slot table)
+        each slot's tokens scatter to its own cursor; out-of-bounds writes
+        (idle slots past max_len) are dropped by the scatter."""
         k_new, v_new = new_kv
+        lens = jnp.asarray(cs["len"])
+        if lens.ndim:
+            B, Sq = k_new.shape[0], k_new.shape[1]
+            rows = jnp.arange(B)[:, None]
+            cols = lens[:, None] + jnp.arange(Sq)[None, :]
+            return {
+                "k": cs["k"].at[idx, rows, cols].set(
+                    _to_cache(k_new, cs["k"].dtype), mode="drop"),
+                "v": cs["v"].at[idx, rows, cols].set(
+                    _to_cache(v_new, cs["v"].dtype), mode="drop"),
+                "len": cs["len"],
+            }
         start = (idx, 0, cs["len"], 0, 0)
         return {
             "k": jax.lax.dynamic_update_slice(
@@ -465,13 +488,14 @@ def lm_forward(params, cfg: ModelConfig, segments, *, tokens=None,
 
 
 def lm_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
-              as_specs: bool = False):
+              as_specs: bool = False, per_slot_len: bool = False):
     L = cfg.num_layers
     mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if as_specs else (
         lambda s, d: jnp.zeros(s, d))
+    len_shape = (batch,) if per_slot_len else ()
     return {"k": mk((L, batch, max_len, cfg.num_kv_heads, cfg.hd), dtype),
             "v": mk((L, batch, max_len, cfg.num_kv_heads, cfg.hd), dtype),
-            "len": mk((), jnp.int32)}
+            "len": mk(len_shape, jnp.int32)}
 
 
 def mask_padded_vocab(logits, cfg: ModelConfig):

@@ -1,0 +1,18 @@
+"""int4 serving subsystem (DESIGN.md §7).
+
+The deployment side of the paper, grown into a real package:
+
+* ``scheduler``  — request queue + fixed slot table, continuous-batching refill
+* ``kv_cache``   — slot-state manager (per-layer KV cache, per-slot lengths)
+* ``engine``     — prefill/decode-separated step loop over the deployed model
+* ``metrics``    — latency/throughput recorder (tokens/sec, p50/p99 steps)
+
+``launch/serve.py`` is a thin CLI shim over this package.
+"""
+from .engine import ServingEngine
+from .kv_cache import SlotKVCache
+from .metrics import ServeMetrics
+from .scheduler import Request, Scheduler
+
+__all__ = ["Request", "Scheduler", "ServingEngine", "SlotKVCache",
+           "ServeMetrics"]

@@ -1,0 +1,214 @@
+"""Serving engine: prefill/decode-separated step loop (DESIGN.md §7).
+
+Two-phase execution over the deployed int4/int8 model:
+
+* **prefill** — a newly admitted request's whole prompt runs in ONE forward
+  (batch 1, prompt padded to a power-of-two bucket to bound recompiles); the
+  resulting per-layer KV rows are scattered into the request's slot and the
+  first output token falls out of the same pass.
+* **decode** — one token per step for every occupied slot, batched across the
+  slot table with per-slot cache cursors (kv_cache.SlotKVCache).
+
+This replaces the seed driver's token-at-a-time prompt feeding (prompt_len
+engine steps per request, each a full batched forward) with prompt_len tokens
+per prefill step — and isolates slots, which the seed's global cache cursor
+did not.
+
+Families without a {'k','v','len'} decode cache (xlstm, hybrid, encdec) fall
+back to ``prefill_mode='token'``: the seed semantics with a shared cursor.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models import api
+from .kv_cache import SlotKVCache
+from .metrics import ServeMetrics
+from .scheduler import Request, Scheduler
+
+_TOKEN_ONLY_FAMILIES = ("xlstm", "hybrid", "encdec")
+
+
+def _bucket_for(plen: int, max_len: int, min_bucket: int = 8) -> int:
+    b = min_bucket
+    while b < plen:
+        b *= 2
+    return min(b, max_len)
+
+
+class ServingEngine:
+    """Continuous-batching engine over the deployed quantized model."""
+
+    def __init__(self, params_int, cfg: ModelConfig, segments, *,
+                 slots: int = 8, max_len: int = 512, dtype=jnp.float32,
+                 prefill_mode: str = "auto",
+                 metrics: Optional[ServeMetrics] = None):
+        self.cfg = cfg
+        self.segments = segments
+        self.params = params_int
+        self.slots = slots
+        self.max_len = max_len
+        self.dtype = dtype
+        self.scheduler = Scheduler(slots)
+        self.metrics = metrics if metrics is not None else ServeMetrics()
+        self.generated: list[list[int]] = [[] for _ in range(slots)]
+
+        if prefill_mode == "auto":
+            prefill_mode = ("token" if cfg.family in _TOKEN_ONLY_FAMILIES
+                            else "chunked")
+        if prefill_mode == "chunked" and cfg.family in _TOKEN_ONLY_FAMILIES:
+            raise ValueError(
+                f"{cfg.family}: no KV slot cache; use prefill_mode='token'")
+        self.prefill_mode = prefill_mode
+
+        if prefill_mode == "chunked":
+            self.kv = SlotKVCache(cfg, slots, max_len, dtype=dtype)
+            self.state = None
+            self._prefill_fns: dict[int, callable] = {}
+        else:
+            self.kv = None
+            self.state = api.decode_state(cfg, slots, max_len, dtype=dtype)
+            self.pos = np.zeros(slots, np.int32)   # per-slot prompt cursor
+
+        def step(params, state, tokens):
+            logits, new_state, _, _ = api.forward(
+                params, cfg, segments, state=state, tokens=tokens)
+            return jnp.argmax(logits[:, -1], axis=-1), new_state
+
+        self._step = jax.jit(step, donate_argnums=(1,))
+
+    # ------------------------------------------------------------------ API
+    def submit(self, req: Request) -> Request:
+        return self.scheduler.submit(req)
+
+    @property
+    def done(self) -> list[Request]:
+        return self.scheduler.done
+
+    @property
+    def queue(self):
+        return self.scheduler.queue
+
+    @property
+    def active(self):
+        return self.scheduler.active
+
+    def run_until_drained(self, max_steps: int = 10000) -> int:
+        steps = 0
+        while self.scheduler.has_work and steps < max_steps:
+            self.engine_step()
+            steps += 1
+        return steps
+
+    def engine_step(self) -> None:
+        if self.prefill_mode == "chunked":
+            self._chunked_step()
+        else:
+            self._token_step()
+
+    # ------------------------------------------------------------- chunked
+    def _prefill_fn(self, bucket: int):
+        """Batch-1 full-prompt forward, compiled once per bucket size."""
+        fn = self._prefill_fns.get(bucket)
+        if fn is None:
+            cfg, segments, dtype = self.cfg, self.segments, self.dtype
+
+            def pf(params, tokens):
+                st = api.decode_state(cfg, 1, bucket, dtype=dtype)
+                logits, st2, _, _ = api.forward(
+                    params, cfg, segments, state=st, tokens=tokens)
+                return logits, st2
+
+            fn = self._prefill_fns[bucket] = jax.jit(pf)
+        return fn
+
+    def _prefill_into_slot(self, slot: int, req: Request) -> None:
+        plen = len(req.prompt)
+        if plen <= 0:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if plen + req.max_new_tokens > self.max_len:
+            # past max_len the cache scatter drops writes silently — decode
+            # would keep emitting tokens that cannot see recent context
+            raise ValueError(
+                f"request {req.rid}: prompt ({plen}) + max_new_tokens "
+                f"({req.max_new_tokens}) exceeds engine max_len "
+                f"({self.max_len})")
+        bucket = _bucket_for(plen, self.max_len)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :plen] = req.prompt
+        t0 = time.perf_counter()
+        logits, pstate = self._prefill_fn(bucket)(
+            self.params, jnp.asarray(toks))
+        first = int(np.asarray(jnp.argmax(logits[0, plen - 1])))
+        self.kv.reset_slot(slot)
+        self.kv.insert_prefill(slot, pstate, plen, bucket)
+        self.metrics.record("prefill", time.perf_counter() - t0, plen)
+        self.generated[slot] = [first]
+        self._maybe_complete(slot, req)
+
+    def _chunked_step(self) -> None:
+        for s, req in self.scheduler.admit():
+            self._prefill_into_slot(s, req)
+        active = self.scheduler.active_slots()
+        if not active:
+            return
+        toks = np.zeros((self.slots, 1), np.int32)
+        for s in active:
+            toks[s, 0] = self.generated[s][-1]
+        t0 = time.perf_counter()
+        next_tok, self.kv.state = self._step(self.params, self.kv.state,
+                                             jnp.asarray(toks))
+        next_tok = np.asarray(next_tok)
+        self.metrics.record("decode", time.perf_counter() - t0, len(active))
+        for s in active:
+            req = self.scheduler.active[s]
+            self.generated[s].append(int(next_tok[s]))
+            self._maybe_complete(s, req)
+
+    def _maybe_complete(self, slot: int, req: Request) -> None:
+        if len(self.generated[slot]) >= req.max_new_tokens:
+            req.out = np.array(self.generated[slot][:req.max_new_tokens],
+                               np.int32)
+            self.scheduler.complete(slot)
+
+    # --------------------------------------------------------------- token
+    def _token_step(self) -> None:
+        """Seed semantics: prompts fed one token per batched step (global
+        cache cursor; used by families without a KV slot cache)."""
+        for s, _req in self.scheduler.admit():
+            self.generated[s] = []
+            self.pos[s] = 0
+        active = self.scheduler.active_slots()
+        if not active:
+            return
+        toks = np.zeros((self.slots, 1), np.int32)
+        for s in active:
+            req = self.scheduler.active[s]
+            if self.pos[s] < len(req.prompt):      # still feeding the prompt
+                toks[s, 0] = req.prompt[self.pos[s]]
+            elif self.generated[s]:
+                toks[s, 0] = self.generated[s][-1]
+            else:
+                toks[s, 0] = req.prompt[-1]
+        t0 = time.perf_counter()
+        next_tok, self.state = self._step(self.params, self.state,
+                                          jnp.asarray(toks))
+        next_tok = np.asarray(next_tok)
+        # a slot emits a generated token this step once it has consumed its
+        # last prompt token, i.e. pos >= plen - 1 before the increment
+        n_decoding = sum(
+            self.pos[s] >= len(self.scheduler.active[s].prompt) - 1
+            for s in active)
+        self.metrics.record("decode", time.perf_counter() - t0, n_decoding)
+        for s in active:
+            req = self.scheduler.active[s]
+            self.pos[s] += 1
+            if self.pos[s] >= len(req.prompt):
+                self.generated[s].append(int(next_tok[s]))
+                self._maybe_complete(s, req)

@@ -1,0 +1,69 @@
+"""Slot-state manager: per-layer KV cache with per-slot lengths (DESIGN.md §7).
+
+The decode cache is one stacked buffer {'k','v': (L, slots, max_len, Hkv, hd),
+'len': (slots,)}. Each slot masks and appends at its OWN cursor, so refilling
+a finished slot with a new request cannot read the previous occupant's
+entries — the seed engine's single global cursor could (stale rows below the
+shared ``len`` stayed attendable across refills).
+
+All mutations are jitted with donated operands so XLA aliases the cache
+buffers instead of copying the whole table per admission.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models import api
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _reset(state, slot):
+    return {"k": state["k"].at[:, slot].set(0),
+            "v": state["v"].at[:, slot].set(0),
+            "len": state["len"].at[slot].set(0)}
+
+
+@functools.partial(jax.jit, donate_argnums=(0,),
+                   static_argnames=("bucket",))
+def _insert(state, pstate, slot, length, bucket: int):
+    """Scatter a batch-1 prefill cache (L, 1, bucket, H, hd) into ``slot``.
+
+    Rows past ``length`` hold prompt padding; they stay masked (pos >= len)
+    and are overwritten by subsequent decode writes at the slot cursor.
+    """
+    return {"k": state["k"].at[:, slot, :bucket].set(pstate["k"][:, 0]),
+            "v": state["v"].at[:, slot, :bucket].set(pstate["v"][:, 0]),
+            "len": state["len"].at[slot].set(length)}
+
+
+class SlotKVCache:
+    """Slot table over the transformer-family decode cache."""
+
+    def __init__(self, cfg: ModelConfig, slots: int, max_len: int,
+                 dtype=jnp.float32):
+        self.cfg = cfg
+        self.slots = slots
+        self.max_len = max_len
+        self.dtype = dtype
+        self.state = api.decode_state(cfg, slots, max_len, dtype=dtype,
+                                      per_slot_len=True)
+
+    def reset_slot(self, slot: int) -> None:
+        """Zero a slot's K/V rows and rewind its cursor (request eviction)."""
+        self.state = _reset(self.state, jnp.int32(slot))
+
+    def insert_prefill(self, slot: int, pstate, length: int,
+                       bucket: int) -> None:
+        """Install a prefilled batch-1 cache (allocated with max_len=bucket)
+        into ``slot`` with the slot cursor at ``length``."""
+        assert bucket <= self.max_len, (bucket, self.max_len)
+        self.state = _insert(self.state, pstate, jnp.int32(slot),
+                             jnp.int32(length), bucket)
+
+    def lengths(self) -> np.ndarray:
+        return np.asarray(self.state["len"])

@@ -1,0 +1,54 @@
+"""Latency/throughput recorder for the serving engine (DESIGN.md §7).
+
+Records (kind, seconds, tokens) events — kind is 'prefill' or 'decode' — and
+summarizes tokens/sec plus p50/p99 step latency per kind. Pure host-side
+bookkeeping; never touches device state.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+class ServeMetrics:
+    def __init__(self):
+        self._events: list[tuple[str, float, int]] = []
+        self._t0 = time.perf_counter()
+
+    def record(self, kind: str, seconds: float, tokens: int) -> None:
+        self._events.append((kind, seconds, tokens))
+
+    def _kind(self, kind: str) -> tuple[np.ndarray, int]:
+        lat = np.array([s for k, s, _ in self._events if k == kind])
+        toks = sum(t for k, _, t in self._events if k == kind)
+        return lat, toks
+
+    def summary(self) -> dict:
+        out: dict = {"wall_s": time.perf_counter() - self._t0}
+        total_tokens = 0
+        for kind in ("prefill", "decode"):
+            lat, toks = self._kind(kind)
+            total_tokens += toks
+            if len(lat) == 0:
+                continue
+            out[f"{kind}_steps"] = len(lat)
+            out[f"{kind}_tokens"] = toks
+            out[f"{kind}_p50_ms"] = float(np.percentile(lat, 50) * 1e3)
+            out[f"{kind}_p99_ms"] = float(np.percentile(lat, 99) * 1e3)
+            out[f"{kind}_mean_ms"] = float(lat.mean() * 1e3)
+        out["total_tokens"] = total_tokens
+        busy = sum(s for _, s, _ in self._events)
+        out["tokens_per_s"] = total_tokens / max(busy, 1e-9)
+        return out
+
+    def report(self) -> str:
+        s = self.summary()
+        parts = [f"{s['total_tokens']} tok @ {s['tokens_per_s']:.1f} tok/s"]
+        for kind in ("prefill", "decode"):
+            if f"{kind}_steps" in s:
+                parts.append(
+                    f"{kind}: {s[f'{kind}_steps']} steps "
+                    f"p50 {s[f'{kind}_p50_ms']:.1f}ms "
+                    f"p99 {s[f'{kind}_p99_ms']:.1f}ms")
+        return " | ".join(parts)

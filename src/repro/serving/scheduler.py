@@ -1,0 +1,72 @@
+"""Request scheduler: FIFO queue + fixed slot table with continuous refill.
+
+Continuous-batching-lite (DESIGN.md §7): the engine decodes one token per
+step for every occupied slot; whenever a request finishes, its slot is
+refilled from the queue on the next ``admit`` — no global batch barrier, so
+short requests never wait for long ones.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray              # (prompt_len,) int32
+    max_new_tokens: int = 16
+    out: Optional[np.ndarray] = None
+    rid: int = -1                   # assigned by the scheduler on submit
+
+
+class Scheduler:
+    """Owns the queue, the slot table and request lifecycle bookkeeping."""
+
+    def __init__(self, slots: int):
+        if slots < 1:
+            raise ValueError(f"need at least one slot, got {slots}")
+        self.slots = slots
+        self.queue: deque[Request] = deque()
+        self.active: list[Optional[Request]] = [None] * slots
+        self.done: list[Request] = []
+        self._next_id = 0
+
+    # ------------------------------------------------------------- lifecycle
+    def submit(self, req: Request) -> Request:
+        if req.rid < 0:
+            req.rid = self._next_id
+            self._next_id += 1
+        self.queue.append(req)
+        return req
+
+    def admit(self) -> list[tuple[int, Request]]:
+        """Fill every free slot from the queue; returns the new placements."""
+        placed = []
+        for s in range(self.slots):
+            if self.active[s] is None and self.queue:
+                req = self.queue.popleft()
+                self.active[s] = req
+                placed.append((s, req))
+        return placed
+
+    def complete(self, slot: int) -> Request:
+        req = self.active[slot]
+        assert req is not None, f"slot {slot} is empty"
+        self.active[slot] = None
+        self.done.append(req)
+        return req
+
+    # ------------------------------------------------------------- queries
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.active)
+
+    @property
+    def num_active(self) -> int:
+        return sum(r is not None for r in self.active)
+
+    def active_slots(self) -> list[int]:
+        return [s for s, r in enumerate(self.active) if r is not None]

@@ -3,7 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core.calibration import ActCalibrator, weight_scale
 from repro.core.distill import (hidden_state_loss, kl_from_logits,

@@ -1,0 +1,227 @@
+"""Serving subsystem tests: scheduler refill, KV slot isolation, fused decode.
+
+DESIGN.md §7 invariants:
+* the scheduler refills freed slots from the queue (continuous batching);
+* a refilled slot cannot observe the previous occupant's KV entries — a
+  request's output is identical whether it runs on a fresh engine or in a
+  recycled slot;
+* the fused int4 decode epilogue (dequant+bias+GELU in-kernel) produces the
+  same token stream as the unfused path (the integer accumulators match
+  exactly; the f32 epilogue may differ only in last-ulp fusion noise).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.packing import quantize_weight
+from repro.core.policy import QuantPolicy
+from repro.core.qat import calibrate_weight_scales, default_bits_fn, \
+    deploy_params
+from repro.models import api
+from repro.serving import Request, Scheduler, ServeMetrics, ServingEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _engine(slots=2, *, act=None, use_pallas=False, fuse=False,
+            last_k_int4=None, max_len=64, prefill_mode="auto"):
+    cfg = reduced(get_config("stablelm-3b"))
+    if act is not None:
+        cfg = cfg.replace(act=act)
+    n = cfg.num_layers
+    k4 = n // 2 if last_k_int4 is None else last_k_int4
+    pol = QuantPolicy(num_layers=n, mode="int", last_k_int4=k4)
+    segs = api.segments_for(cfg, pol, use_pallas=use_pallas,
+                            fuse_epilogue=fuse)
+    params = api.init_model(cfg, KEY)
+    params = calibrate_weight_scales(params, default_bits_fn(cfg, pol))
+    return ServingEngine(deploy_params(params, cfg, segs), cfg, segs,
+                         slots=slots, max_len=max_len,
+                         prefill_mode=prefill_mode), cfg
+
+
+# ---------------------------------------------------------------- scheduler
+
+def test_scheduler_refills_freed_slots():
+    sch = Scheduler(slots=2)
+    reqs = [sch.submit(Request(prompt=np.array([i]), max_new_tokens=1))
+            for i in range(5)]
+    placed = sch.admit()
+    assert [s for s, _ in placed] == [0, 1]
+    assert [r.rid for _, r in placed] == [0, 1]
+    assert sch.admit() == []                      # table full, no-op
+    assert len(sch.queue) == 3
+
+    done = sch.complete(0)                        # slot 0 finishes ...
+    assert done is reqs[0]
+    placed = sch.admit()                          # ... and refills from queue
+    assert placed == [(0, reqs[2])]
+    assert sch.num_active == 2 and sch.has_work
+
+    for s in (0, 1):
+        sch.complete(s)
+    sch.admit()
+    for s in (0, 1):
+        sch.complete(s)
+    assert not sch.has_work
+    assert sorted(r.rid for r in sch.done) == [0, 1, 2, 3, 4]
+
+
+def test_scheduler_preserves_fifo_order():
+    sch = Scheduler(slots=1)
+    for i in range(3):
+        sch.submit(Request(prompt=np.array([i])))
+    order = []
+    while sch.has_work:
+        for s, r in sch.admit():
+            order.append(r.rid)
+            sch.complete(s)
+    assert order == [0, 1, 2]
+
+
+# ------------------------------------------------------------ slot isolation
+
+def test_kv_cache_slot_isolation_across_refills():
+    """A request decoded in a recycled slot must produce exactly the tokens
+    it produces on a fresh engine (per-slot cursors; DESIGN.md §7)."""
+    r1 = np.arange(1, 11, dtype=np.int32)         # long, fills cache rows
+    r2 = np.array([7, 3, 11, 2], np.int32)
+
+    eng, _ = _engine(slots=1)
+    assert eng.prefill_mode == "chunked"
+    eng.submit(Request(prompt=r1.copy(), max_new_tokens=6))
+    eng.submit(Request(prompt=r2.copy(), max_new_tokens=6))
+    eng.run_until_drained()
+    recycled = eng.done[1].out
+
+    fresh_eng, _ = _engine(slots=1)
+    fresh_eng.submit(Request(prompt=r2.copy(), max_new_tokens=6))
+    fresh_eng.run_until_drained()
+    fresh = fresh_eng.done[0].out
+
+    np.testing.assert_array_equal(recycled, fresh)
+
+
+def test_concurrent_slots_match_solo_runs():
+    """Requests decoded side-by-side in the slot table produce the same
+    tokens as each would alone (no cross-slot leakage)."""
+    prompts = [np.array([5, 9, 2], np.int32),
+               np.array([8, 8, 1, 4, 12], np.int32)]
+    eng, _ = _engine(slots=2)
+    for p in prompts:
+        eng.submit(Request(prompt=p.copy(), max_new_tokens=5))
+    eng.run_until_drained()
+    batched = {r.rid: r.out for r in eng.done}
+
+    for i, p in enumerate(prompts):
+        solo, _ = _engine(slots=2)
+        solo.submit(Request(prompt=p.copy(), max_new_tokens=5))
+        solo.run_until_drained()
+        np.testing.assert_array_equal(batched[i], solo.done[0].out)
+
+
+def test_engine_deterministic_and_drains():
+    outs = []
+    for _ in range(2):
+        eng, cfg = _engine(slots=2)
+        rng = np.random.default_rng(3)
+        for _ in range(5):
+            eng.submit(Request(prompt=rng.integers(1, cfg.vocab_size, 6)
+                               .astype(np.int32), max_new_tokens=4))
+        steps = eng.run_until_drained()
+        assert len(eng.done) == 5
+        assert all(len(r.out) == 4 for r in eng.done)
+        assert steps < 60
+        outs.append([r.out.tolist() for r in eng.done])
+    assert outs[0] == outs[1]
+
+
+def test_token_mode_still_supported():
+    eng, cfg = _engine(slots=2, prefill_mode="token")
+    eng.submit(Request(prompt=np.arange(1, 7, dtype=np.int32),
+                       max_new_tokens=3))
+    eng.run_until_drained()
+    assert len(eng.done) == 1 and len(eng.done[0].out) == 3
+    # metrics count every generated token, including the one emitted on the
+    # step that consumes the last prompt token
+    assert eng.metrics.summary()["decode_tokens"] == 3
+
+
+def test_request_exceeding_max_len_rejected():
+    """Past max_len the cache scatter would drop writes silently; the engine
+    must reject the request up front instead of degrading quality."""
+    eng, _ = _engine(slots=1, max_len=16)
+    eng.submit(Request(prompt=np.arange(1, 11, dtype=np.int32),
+                       max_new_tokens=12))
+    with pytest.raises(ValueError, match="max_len"):
+        eng.run_until_drained()
+
+
+# ------------------------------------------------------- fused decode kernel
+
+def _int4_operands(M=8, K=64, N=32, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((K, N)) * 0.05, jnp.float32)
+    s_w = jnp.max(jnp.abs(w), axis=0, keepdims=True) / 8.0
+    s_a = jnp.asarray(np.float32(np.abs(np.asarray(x)).max() / 8.0))
+    wq, _ = quantize_weight(w, s_w, 4)
+    b = jnp.asarray(rng.standard_normal((N,)), jnp.float32)
+    return x, wq, s_a, s_w, b
+
+
+def test_fused_epilogue_integer_accumulator_exact():
+    """The fused kernel's integer matmul is bit-exact vs the unfused kernel:
+    recovering acc = out / (s_a*s_w) from both paths gives the same ints."""
+    from repro.kernels import ops
+    x, wq, s_a, s_w, _ = _int4_operands()
+    unfused = ops.int4_matmul(x, wq, s_a, s_w, a_bits=4)
+    fused = ops.int4_matmul(x, wq, s_a, s_w, a_bits=4, act="none")
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(unfused))
+    scale = np.asarray(s_a * s_w)
+    np.testing.assert_array_equal(np.rint(np.asarray(fused) / scale),
+                                  np.rint(np.asarray(unfused) / scale))
+
+
+def test_fused_epilogue_matches_unfused_composition():
+    from repro.kernels import ops
+    from repro.models.layers import gelu_f32
+    x, wq, s_a, s_w, b = _int4_operands()
+    ref = gelu_f32(ops.int4_matmul(x, wq, s_a, s_w, a_bits=4) + b)
+    fused = ops.int4_matmul(x, wq, s_a, s_w, a_bits=4, bias=b, act="gelu")
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(ref),
+                               rtol=0, atol=1e-5)
+
+
+def test_engine_fused_vs_unfused_token_streams_exact():
+    """End-to-end: the engine's decode steps emit the SAME token ids with the
+    fused epilogue on or off (exact integer match of the outputs)."""
+    prompts = [np.array([3, 1, 4, 1, 5], np.int32),
+               np.array([2, 7, 1, 8], np.int32)]
+    streams = []
+    for fuse in (False, True):
+        eng, _ = _engine(slots=2, act="gelu", use_pallas=True, fuse=fuse,
+                         last_k_int4=4)   # all layers int4
+        for p in prompts:
+            eng.submit(Request(prompt=p.copy(), max_new_tokens=4))
+        eng.run_until_drained()
+        streams.append({r.rid: r.out.tolist() for r in eng.done})
+    assert streams[0] == streams[1]
+
+
+# ------------------------------------------------------------------ metrics
+
+def test_metrics_summary_percentiles():
+    m = ServeMetrics()
+    for ms in (1.0, 2.0, 3.0, 4.0):
+        m.record("decode", ms / 1e3, 2)
+    m.record("prefill", 0.01, 7)
+    s = m.summary()
+    assert s["decode_steps"] == 4
+    assert s["decode_tokens"] == 8
+    assert s["total_tokens"] == 15
+    np.testing.assert_allclose(s["decode_p50_ms"], 2.5)
+    assert 3.9 < s["decode_p99_ms"] <= 4.0
+    assert s["tokens_per_s"] == pytest.approx(15 / 0.02)

@@ -1,0 +1,45 @@
+#!/usr/bin/env python3
+"""Docs check: every `DESIGN.md §N` reference in src/ (and tests/, examples/,
+benchmarks/) must resolve to a real `## §N` section heading in DESIGN.md.
+
+Exit 1 with a listing of dangling references otherwise. Run from the repo
+root:  python tools/check_design_refs.py
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+REF = re.compile(r"DESIGN\.md\s+§(\d+)")
+HEADING = re.compile(r"^##\s+§(\d+)\b", re.M)
+
+
+def main() -> int:
+    design = ROOT / "DESIGN.md"
+    if not design.exists():
+        print("FAIL: DESIGN.md does not exist")
+        return 1
+    sections = set(HEADING.findall(design.read_text()))
+
+    dangling = []
+    for sub in ("src", "tests", "examples", "benchmarks"):
+        for path in sorted((ROOT / sub).rglob("*.py")):
+            for i, line in enumerate(path.read_text().splitlines(), 1):
+                for sec in REF.findall(line):
+                    if sec not in sections:
+                        dangling.append(
+                            f"{path.relative_to(ROOT)}:{i}: DESIGN.md §{sec}")
+    if dangling:
+        print(f"FAIL: {len(dangling)} dangling DESIGN.md references "
+              f"(sections present: {sorted(sections)}):")
+        print("\n".join(dangling))
+        return 1
+    print(f"OK: all DESIGN.md § references resolve "
+          f"(sections: {sorted(sections)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
