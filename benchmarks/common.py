@@ -10,11 +10,9 @@ import numpy as np
 from repro.configs import get_config, reduced
 from repro.core import qat
 from repro.core.distill import (combine_losses, minilm_losses, output_loss)
-from repro.core.policy import QuantPolicy
 from repro.data import classification_batches
 from repro.models import api
-from repro.models.bert import (bert_classify_logits, classification_loss,
-                               init_bert_classifier)
+from repro.models.bert import bert_classify_logits, classification_loss
 from repro.optim import adam_init, adam_update, linear_warmup_decay
 
 NUM_CLASSES = 2

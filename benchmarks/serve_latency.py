@@ -1,10 +1,14 @@
-"""Serving latency/throughput benchmark: int4 vs int8 vs fp32 (paper Table 2's
-deployment claim, measured end-to-end through the serving subsystem).
+"""Serving latency/throughput benchmark: weight precision x KV-cache precision
+(paper Table 2's deployment claim, measured end-to-end through the serving
+subsystem).
 
-For each precision the same tiny gelu-FFN causal LM is deployed and a burst
-of requests runs through ``repro.serving.ServingEngine`` (chunked prefill +
-batched decode). Reports tokens/sec and p50/p99 engine-step latency from the
-engine's ServeMetrics recorder.
+For each variant the same tiny gelu-FFN causal LM is deployed and a burst of
+requests runs through ``repro.serving.ServingEngine`` (chunked prefill +
+batched decode). The ``kv_bits`` axis (DESIGN.md §8) covers the fp cache and
+the int8/int4 packed cache with the fused Pallas decode-attention kernel on
+the deployed-int variants. Reports tokens/sec and p50/p99 engine-step latency
+from the engine's ServeMetrics recorder, and writes a machine-readable
+``BENCH_serve.json`` consumed by the CI bench gate (``tools/check_bench.py``).
 
 Runs on CPU: the int paths execute the Pallas kernels in interpret mode (the
 same code path that compiles to Mosaic on TPU), with the int4 variant using
@@ -13,11 +17,13 @@ dispatch overhead, not MXU throughput — the point here is that the harness
 measures the real serving path; on TPU the same script reports the paper's
 speedup trajectory.
 
-``python -m benchmarks.serve_latency [--quick]``
+``python -m benchmarks.serve_latency [--quick] [--out BENCH_serve.json]``
 """
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 
 import jax
 import numpy as np
@@ -50,39 +56,79 @@ def _serve_burst(eng, cfg, n_requests, max_new, seed=0):
     eng.run_until_drained()
 
 
-def main(quick: bool = False) -> None:
+def _warmup(eng, cfg):
+    """Compile every code path the timed burst will hit OUTSIDE the metrics
+    window: the measured prompt lengths [4, 12) map to prefill buckets
+    {8, 16}, so one request per bucket plus a decode step. Otherwise a
+    one-off XLA compile lands inside the timed window and dominates tok/s."""
+    rng = np.random.default_rng(123)
+    for plen in (6, 11):                     # buckets 8 and 16
+        eng.submit(Request(prompt=rng.integers(1, cfg.vocab_size, plen)
+                           .astype(np.int32), max_new_tokens=2))
+    eng.run_until_drained()
+
+
+def run_variants(quick: bool = False) -> dict:
     cfg = reduced(get_config("stablelm-3b")).replace(act="gelu")
     n = cfg.num_layers
     n_requests = 3 if quick else 8
     max_new = 4 if quick else 8
     slots = 2
 
+    int8_pol = QuantPolicy(num_layers=n, mode="int", last_k_int4=0)
+    int4_pol = QuantPolicy(num_layers=n, mode="int", last_k_int4=n)
+    # (name, policy, use_pallas, fuse_epilogue, kv_bits)
     variants = [
-        ("fp32", None, False, False),
-        ("int8", QuantPolicy(num_layers=n, mode="int", last_k_int4=0),
-         True, False),
-        ("int4", QuantPolicy(num_layers=n, mode="int", last_k_int4=n),
-         True, True),  # all-int4 + fused decode epilogue
+        ("fp32_kv16", None, False, False, 16),
+        ("int8_kv16", int8_pol, True, False, 16),
+        ("int4_kv16", int4_pol, True, True, 16),
+        ("int4_kv8", int4_pol, True, True, 8),
+        ("int4_kv4", int4_pol, True, True, 4),
     ]
-    print("variant,tokens_per_s,decode_p50_ms,decode_p99_ms,"
-          "prefill_p50_ms,prefill_p99_ms,total_tokens")
-    for name, policy, use_pallas, fuse in variants:
-        params, segments = _build(cfg, policy, use_pallas, fuse)
-        eng = ServingEngine(params, cfg, segments, slots=slots, max_len=64)
-        # warmup: compile prefill buckets + decode step outside the metrics
-        _serve_burst(eng, cfg, n_requests=2, max_new=2, seed=123)
+    results = {}
+    built = {}   # identical deployed params reused across kv_bits variants
+    for name, policy, use_pallas, fuse, kv_bits in variants:
+        key = (id(policy), use_pallas, fuse)
+        if key not in built:
+            built[key] = _build(cfg, policy, use_pallas, fuse)
+        params, segments = built[key]
+        eng = ServingEngine(params, cfg, segments, slots=slots, max_len=64,
+                            kv_bits=kv_bits)
+        _warmup(eng, cfg)
         eng.metrics = ServeMetrics()
         _serve_burst(eng, cfg, n_requests=n_requests, max_new=max_new)
-        s = eng.metrics.summary()
+        results[name] = eng.metrics.summary()
+    return results
+
+
+def main(quick: bool = False, out: str | None = "BENCH_serve.json") -> None:
+    results = run_variants(quick=quick)
+    print("variant,tokens_per_s,decode_p50_ms,decode_p99_ms,"
+          "prefill_p50_ms,prefill_p99_ms,total_tokens")
+    for name, s in results.items():
         print(f"{name},{s['tokens_per_s']:.1f},"
               f"{s.get('decode_p50_ms', 0):.2f},"
               f"{s.get('decode_p99_ms', 0):.2f},"
               f"{s.get('prefill_p50_ms', 0):.2f},"
               f"{s.get('prefill_p99_ms', 0):.2f},"
               f"{s['total_tokens']}")
+    if out:
+        payload = {
+            "bench": "serve_latency",
+            "quick": quick,
+            "backend": jax.default_backend(),
+            "platform": platform.platform(),
+            "variants": results,
+        }
+        with open(out, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"[serve_latency] wrote {out}")
 
 
 if __name__ == "__main__":
     p = argparse.ArgumentParser()
     p.add_argument("--quick", action="store_true")
-    main(quick=p.parse_args().quick)
+    p.add_argument("--out", default="BENCH_serve.json",
+                   help="machine-readable results path ('' to skip)")
+    a = p.parse_args()
+    main(quick=a.quick, out=a.out or None)

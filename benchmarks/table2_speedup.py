@@ -22,10 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.policy import QuantPolicy
-from repro.core.qat import calibrate_weight_scales, default_bits_fn, \
-    deploy_params
-from repro.models import api
+from repro.core.qat import calibrate_weight_scales
 from repro.models.layers import QuantSpec
 from repro.models.transformer import block_apply
 
@@ -37,10 +34,7 @@ PEAK_INT8 = 394e12
 def _layer_params(cfg, mode, bits, key):
     from repro.models.transformer import init_block
     p = init_block(key, cfg, stacked=None)
-    pol_bits = bits if bits else 32
     if mode != "none":
-        from repro.core import qat as q
-
         def bf(prefix):
             return np.float32(bits)
         p = {"layers": p}

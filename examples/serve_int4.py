@@ -37,7 +37,10 @@ def main():
     print(f"deployed weights: {n_bytes/1e6:.2f}MB vs fp32 {n_fp/1e6:.2f}MB "
           f"({n_fp/n_bytes:.1f}x reduction)")
 
-    eng = ServingEngine(deployed, cfg, segments, slots=4, max_len=128)
+    # kv_bits=8 stores the KV cache as int8 codes + per-(token, head)
+    # scales (DESIGN.md §8) — pass 4 for packed int4 nibbles, 16 for fp rows
+    eng = ServingEngine(deployed, cfg, segments, slots=4, max_len=128,
+                        kv_bits=8)
     rng = np.random.default_rng(0)
     t0 = time.time()
     for i in range(12):

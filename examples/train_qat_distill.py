@@ -10,13 +10,10 @@ Run:  PYTHONPATH=src python examples/train_qat_distill.py --steps 200
 """
 import argparse
 
-import jax
-
 from repro.configs import TrainHParams, get_config, reduced
 from repro.core.policy import QuantPolicy
 from repro.data import lm_batches
 from repro.launch.train import run_training
-from repro.models import api
 
 
 def configs(scale: str):

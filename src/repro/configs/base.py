@@ -7,7 +7,6 @@ reduced smoke-test variant of each config.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -59,6 +58,7 @@ class ModelConfig:
     attn_chunk_threshold: int = 2048   # seqs longer than this use chunked
     attn_chunk: int = 1024             # (flash-style) attention
     attn_seq_shard: bool = False       # context-parallel chunked attention
+    kv_bits: int = 16                  # serving KV cache: 16 (fp) | 8 | 4
     dp_axes: tuple = ("data",)         # mesh DP axis names (for constraints)
     fused_proj: bool = False           # fused QKV + gate-up FFN matmuls
     dtype: str = "bfloat16"

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .quantizer import qrange, scale_shape
+from .quantizer import qrange
 
 __all__ = ["weight_scale", "ActCalibrator", "PERCENTILE_DEFAULT",
            "calibration_mode", "active", "record_input"]

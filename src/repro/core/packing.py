@@ -17,7 +17,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from .quantizer import qrange, quantize_to_int
+from .quantizer import quantize_to_int
 
 INT4_BIAS = 7  # maps [-7, 8] -> [0, 15]
 

@@ -14,7 +14,7 @@ int inference path (and its Pallas kernels) can run.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -144,7 +144,6 @@ def calibrate_act_scales(params, cfg: ModelConfig, policy: QuantPolicy,
     new_params = jax.tree.map(lambda a: a, params)  # shallow rebuild
     layers = dict(new_params["layers"])
     for k, site in enumerate(sites):
-        node = layers
         parts = site.split("/")
         # navigate copy-on-write
         def set_in(d, parts, vals):

@@ -15,8 +15,6 @@ small (norms, gates, conv, biases of row-parallel layers) is replicated.
 from __future__ import annotations
 
 import re
-from typing import Optional
-
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 

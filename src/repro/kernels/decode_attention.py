@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: fused decode attention over a quantized KV cache.
+
+One decode step attends a single new token per slot against that slot's
+cached K/V (DESIGN.md §8). With the cache quantized (int8, or int4 nibbles
+packed along head_dim), the dominant HBM stream of a decode step — reading
+S_max * Hkv * hd K/V floats per layer — drops 4-8x: the kernel DMAs the
+*packed* codes plus one f32 scale per (token, head) row and dequantizes
+blocks in VMEM inside the online-softmax loop. The fp32 (B, S) score matrix
+never exists in HBM either.
+
+Layout: grid (B, Hkv); each program owns one (slot, kv-head) pair and the
+``group`` query heads mapped to it (GQA). The loop walks the cache in
+``bs``-row blocks carrying (acc, m, l); rows at positions >= the slot's
+cursor are masked (per-slot lengths — serving refills slots independently).
+The current token's K/V arrive unquantized and are folded in after the loop:
+the new token attends itself at full precision, and the cache write
+(quantize-on-append, models/transformer.write_new_kv) decides what future
+steps see.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .kv_pack import unpack_nibbles_last
+
+NEG_INF = -2.0e38
+DEFAULT_BS = 128
+
+
+def _dequant_rows(codes: jax.Array, scales: jax.Array) -> jax.Array:
+    """(bs, dhp) codes + (bs,) scales -> (bs, dh) f32 rows in VMEM."""
+    if codes.dtype == jnp.uint8:
+        codes = unpack_nibbles_last(codes)
+    return codes.astype(jnp.float32) * scales[:, None]
+
+
+def _kernel(q_ref, kq_ref, vq_ref, ks_ref, vs_ref, kn_ref, vn_ref, len_ref,
+            o_ref, *, bs: int, scale: float):
+    S = kq_ref.shape[1]
+    n_blk = S // bs
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (G, dh)
+    G, dh = q.shape
+    ln = len_ref[0, 0]
+
+    def body(j, carry):
+        acc, m, l = carry
+        k = _dequant_rows(kq_ref[0, pl.ds(j * bs, bs), 0, :],
+                          ks_ref[0, pl.ds(j * bs, bs), 0])       # (bs, dh)
+        v = _dequant_rows(vq_ref[0, pl.ds(j * bs, bs), 0, :],
+                          vs_ref[0, pl.ds(j * bs, bs), 0])
+        s = q @ k.T                                              # (G, bs)
+        pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (G, bs), 1)
+        s = jnp.where(pos < ln, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[:, None] + p @ v
+        return acc_new, m_new, l_new
+
+    acc = jnp.zeros((G, dh), jnp.float32)
+    m = jnp.full((G,), NEG_INF, jnp.float32)
+    l = jnp.zeros((G,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, n_blk, body, (acc, m, l))
+
+    # fold in the current token (fp K/V; it always attends itself)
+    kn = kn_ref[0, 0].astype(jnp.float32)                # (dh,)
+    vn = vn_ref[0, 0].astype(jnp.float32)
+    s_n = q @ kn                                         # (G,)
+    m_new = jnp.maximum(m, s_n)
+    p_n = jnp.exp(s_n - m_new)
+    corr = jnp.exp(m - m_new)
+    l = l * corr + p_n
+    acc = acc * corr[:, None] + p_n[:, None] * vn[None, :]
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
+def decode_attention_pallas(q: jax.Array, k_q: jax.Array, v_q: jax.Array,
+                            k_scale: jax.Array, v_scale: jax.Array,
+                            k_new: jax.Array, v_new: jax.Array,
+                            lengths: jax.Array, *, bs: int = DEFAULT_BS,
+                            interpret: bool = False) -> jax.Array:
+    """q: (B, H, dh) float; k_q/v_q: (B, S, Hkv, dhp) int8 (dhp=dh) or uint8
+    packed nibbles (dhp=dh/2); k_scale/v_scale: (B, S, Hkv) f32 per-row
+    scales; k_new/v_new: (B, Hkv, dh) float; lengths: (B,) int32 per-slot
+    cursors. Returns (B, H, dh) in q.dtype."""
+    B, H, dh = q.shape
+    S, Hkv = k_q.shape[1], k_q.shape[2]
+    group = H // Hkv
+    assert H % Hkv == 0, (H, Hkv)
+    assert S % bs == 0, (S, bs)
+    scale = 1.0 / float(dh) ** 0.5
+    qg = q.reshape(B, Hkv, group, dh)
+    lens = lengths.astype(jnp.int32).reshape(B, 1)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bs=bs, scale=scale),
+        grid=(B, Hkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, dh), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, S, 1, k_q.shape[-1]), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, S, 1, v_q.shape[-1]), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, S, 1), lambda b, h: (b, 0, h)),
+            pl.BlockSpec((1, S, 1), lambda b, h: (b, 0, h)),
+            pl.BlockSpec((1, 1, dh), lambda b, h: (b, h, 0)),
+            pl.BlockSpec((1, 1, dh), lambda b, h: (b, h, 0)),
+            pl.BlockSpec((1, 1), lambda b, h: (b, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, dh), lambda b, h: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, group, dh), q.dtype),
+        interpret=interpret,
+    )(qg, k_q, v_q, k_scale, v_scale, k_new, v_new, lens)
+    return out.reshape(B, H, dh)

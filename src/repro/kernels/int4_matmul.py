@@ -23,18 +23,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-INT4_BIAS = 7
+from .kv_pack import INT4_BIAS, unpack_nibbles_rows as _unpack_nibbles
+
+__all__ = ["INT4_BIAS", "int4_matmul_pallas", "int4_matmul_fused_pallas"]
+
 DEFAULT_BM = 128
 DEFAULT_BN = 128
 DEFAULT_BK = 512
-
-
-def _unpack_nibbles(wp: jax.Array) -> jax.Array:
-    """(bk/2, bn) uint8 -> (bk, bn) int8 in [-7, 8]; row 2i from low nibble."""
-    lo = (wp & 0xF).astype(jnp.int8) - INT4_BIAS
-    hi = (wp >> 4).astype(jnp.int8) - INT4_BIAS
-    kk, n = wp.shape
-    return jnp.stack([lo, hi], axis=1).reshape(kk * 2, n)
 
 
 def _apply_epilogue(r: jax.Array, act: str) -> jax.Array:

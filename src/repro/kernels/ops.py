@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from .act_quant import act_quant_pallas
+from .decode_attention import decode_attention_pallas
 from .int4_matmul import int4_matmul_fused_pallas, int4_matmul_pallas
 from .int8_matmul import int8_matmul_pallas
 
@@ -81,6 +82,25 @@ def int4_matmul(x: jax.Array, wp: jax.Array, s_a: jax.Array, s_w: jax.Array,
     return int4_matmul_pallas(x8, wp, s_a, s_w.reshape(1, N), bm=bm, bn=bn,
                               bk=bk, out_dtype=x.dtype,
                               interpret=not _on_tpu())
+
+
+def decode_attention(q: jax.Array, k_q: jax.Array, v_q: jax.Array,
+                     k_scale: jax.Array, v_scale: jax.Array,
+                     k_new: jax.Array, v_new: jax.Array,
+                     lengths: jax.Array) -> jax.Array:
+    """Decode attention over a quantized KV cache (DESIGN.md §8).
+
+    q: (B, H, dh) float — ONE new token per slot; k_q/v_q: (B, S, Hkv, dhp)
+    int8 codes or packed int4 nibbles; k_scale/v_scale: (B, S, Hkv) per-row
+    scales; k_new/v_new: (B, Hkv, dh) the current token's fp K/V; lengths:
+    per-slot cursors — scalar or (B,). Returns (B, H, dh).
+    """
+    B, S = q.shape[0], k_q.shape[1]
+    lens = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32).reshape(-1), (B,))
+    bs = _pick(S, 128)
+    return decode_attention_pallas(q, k_q, v_q, k_scale, v_scale,
+                                   k_new, v_new, lens, bs=bs,
+                                   interpret=not _on_tpu())
 
 
 def _pick(dim: int, target: int, even: bool = False) -> int:

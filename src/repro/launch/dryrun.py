@@ -68,8 +68,6 @@ def _build_cell(arch: str, shape_name: str, mesh, *, policy_kind: str,
         return None, why
 
     n_units = cfg.dec_layers if cfg.family == "encdec" else cfg.num_layers
-    if cfg.family in ("xlstm", "hybrid"):
-        per = cfg.slstm_every if cfg.family == "xlstm" else cfg.attn_every
     k_int4 = {"mkq50": n_units // 2, "int8": 0, "int4": n_units}[policy_kind]
 
     kv_dtype = jnp.dtype(extra.get("kv_dtype", "bfloat16"))

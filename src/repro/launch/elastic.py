@@ -13,10 +13,8 @@ grows), so optimizer hyperparameters remain valid across re-scales.
 from __future__ import annotations
 
 import jax
-import numpy as np
-from jax.sharding import NamedSharding
 
-from ..distributed.sharding import batch_spec, param_specs, shardings_for
+from ..distributed.sharding import shardings_for
 from .mesh import make_mesh_for_devices
 
 

@@ -34,6 +34,11 @@ def main(argv=None):
     p.add_argument("--use-pallas", action="store_true",
                    help="route matmuls through the int4/int8 Pallas kernels "
                         "(fused decode epilogue; interpret mode off-TPU)")
+    p.add_argument("--kv-bits", type=int, default=16, choices=[16, 8, 4],
+                   help="serving KV-cache precision (DESIGN.md §8): 16 keeps "
+                        "fp rows; 8/4 store packed codes + per-(token, head) "
+                        "scales and decode via the fused Pallas "
+                        "decode-attention kernel when --use-pallas is set")
     args = p.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -50,7 +55,8 @@ def main(argv=None):
     params_int = deploy_params(params, cfg, segments)
 
     eng = ServingEngine(params_int, cfg, segments, slots=args.slots,
-                        max_len=128, prefill_mode=args.prefill_mode)
+                        max_len=128, prefill_mode=args.prefill_mode,
+                        kv_bits=args.kv_bits)
     rng = np.random.default_rng(0)
     t0 = time.time()
     for _ in range(args.requests):

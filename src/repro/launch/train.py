@@ -20,7 +20,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 def build_train_step(cfg, segments, hparams, teacher=None, teacher_cfg=None,
@@ -151,7 +150,7 @@ def run_training(cfg, policy, hparams, data_iter, *, ckpt_dir: str,
 
 
 def main(argv=None):
-    from ..configs import SHAPES, TrainHParams, get_config, reduced
+    from ..configs import TrainHParams, get_config, reduced
     from ..core.policy import QuantPolicy
     from ..data import lm_batches
 

@@ -69,21 +69,31 @@ def forward(params, cfg: ModelConfig, segments, *, state=None,
 
 def decode_state(cfg: ModelConfig, batch: int, max_len: int,
                  dtype=jnp.bfloat16, as_specs: bool = False,
-                 per_slot_len: bool = False):
+                 per_slot_len: bool = False,
+                 kv_bits: Optional[int] = None):
     """per_slot_len=True allocates a (batch,) length vector instead of the
     scalar cursor, so a serving slot table can refill slots independently
-    (transformer-family KV caches only)."""
+    (transformer-family KV caches only).
+
+    kv_bits 8/4 allocates the quantized packed cache layout (DESIGN.md §8)
+    instead of fp K/V rows (transformer-family caches only); the default
+    (None) follows ``cfg.kv_bits`` so the config knob means the same thing
+    to every caller."""
+    kv_bits = cfg.kv_bits if kv_bits is None else kv_bits
     if cfg.family == "xlstm":
-        if per_slot_len:
-            raise ValueError("per_slot_len: transformer-family caches only")
+        if per_slot_len or kv_bits != 16:
+            raise ValueError(
+                "per_slot_len/kv_bits: transformer-family caches only")
         return xlstm.xlstm_states(cfg, batch, as_specs=as_specs)
     if cfg.family == "hybrid":
-        if per_slot_len:
-            raise ValueError("per_slot_len: transformer-family caches only")
+        if per_slot_len or kv_bits != 16:
+            raise ValueError(
+                "per_slot_len/kv_bits: transformer-family caches only")
         return hybrid.hybrid_states(cfg, batch, max_len, dtype, as_specs)
     if cfg.family == "encdec":
-        if per_slot_len:
-            raise ValueError("per_slot_len: transformer-family caches only")
+        if per_slot_len or kv_bits != 16:
+            raise ValueError(
+                "per_slot_len/kv_bits: transformer-family caches only")
         L = cfg.dec_layers
         mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if as_specs else (
             lambda s, d: jnp.zeros(s, d))
@@ -91,7 +101,7 @@ def decode_state(cfg: ModelConfig, batch: int, max_len: int,
                 "v": mk((L, batch, max_len, cfg.num_kv_heads, cfg.hd), dtype),
                 "len": mk((), jnp.int32)}
     return transformer.lm_caches(cfg, batch, max_len, dtype, as_specs,
-                                 per_slot_len=per_slot_len)
+                                 per_slot_len=per_slot_len, kv_bits=kv_bits)
 
 
 def decode_extra_inputs(cfg: ModelConfig, batch: int, src_len: int,

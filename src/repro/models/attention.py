@@ -207,12 +207,35 @@ def attention_block(x: jax.Array, p: dict, *, n_heads: int, n_kv: int, hd: int,
 
     new_cache = None
     groups = n_heads // n_kv
-    if cache is not None:
+    if cache is not None and "k_q" in cache:
+        # quantized KV cache (packed codes + per-row scales, DESIGN.md §8).
+        # The deployed-int policy (spec.use_pallas) routes single-token
+        # decode through the fused Pallas kernel — packed K/V blocks are
+        # dequantized in VMEM inside the online-softmax loop; everything
+        # else (fp policies, multi-token steps) takes the dequantize-then-
+        # attend reference path. Both attend the new token's k/v at full
+        # precision; what future steps see is decided by the quantize-on-
+        # append cache write (models/transformer.write_new_kv).
+        from ..kernels.kv_pack import dequantize_kv
+        if spec.use_pallas and Sq == 1:
+            from ..kernels import ops as kops
+            out = kops.decode_attention(
+                q[:, 0], cache["k_q"], cache["v_q"], cache["k_scale"],
+                cache["v_scale"], k[:, 0], v[:, 0], cache["len"])[:, None]
+        else:
+            kk_c = _repeat_kv(dequantize_kv(cache["k_q"], cache["k_scale"],
+                                            q.dtype), groups)
+            vv_c = _repeat_kv(dequantize_kv(cache["v_q"], cache["v_scale"],
+                                            q.dtype), groups)
+            out = cached_decode_attention(q, kk_c, vv_c, _repeat_kv(k, groups),
+                                          _repeat_kv(v, groups), cache["len"])
+        new_cache = (k, v)
+    elif cache is not None:
         # decode: attend over [cache (masked to len), new tokens] at the
         # SCORE level — the cache tensor is only read; the caller writes the
         # (B, Sq, Hkv, dh) new-token k/v at position ``len`` (one small DUS
         # instead of a full-cache copy per layer).
-        if cache["k"].dtype == jnp.int8:   # quantized KV cache (SS Perf)
+        if cache["k"].dtype == jnp.int8:   # static-scale int8 cache (legacy)
             kk_c = _repeat_kv(cache["k"].astype(q.dtype) * KV_QUANT_SCALE,
                               groups)
             vv_c = _repeat_kv(cache["v"].astype(q.dtype) * KV_QUANT_SCALE,

@@ -8,14 +8,12 @@ from the encoder output at prefill).
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from .attention import attention_block, init_attention
-from .layers import QuantSpec, init_norm, qlinear
+from .layers import init_norm
 from .transformer import (_norm, _slice_stack, ffn_apply, init_ffn,
                            mask_padded_vocab, scan_layers)
 

@@ -20,7 +20,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from ..core.quantizer import fake_quant, quantize_to_int, qrange
+from ..core.quantizer import fake_quant, quantize_to_int
 from ..core.packing import unpack_int4
 
 __all__ = ["QuantSpec", "qlinear", "rmsnorm", "layernorm", "gelu_f32",

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from ..core.policy import QuantPolicy
-from .attention import attention_block, cache_specs, init_attention
+from .attention import attention_block, init_attention
 from .layers import (QuantSpec, act_fn, init_linear, init_norm, layernorm,
                      qlinear, rmsnorm)
 
@@ -402,28 +402,44 @@ def lm_forward(params, cfg: ModelConfig, segments, *, tokens=None,
 
         With per-slot lengths (cs['len'] shaped (B,), serving slot table)
         each slot's tokens scatter to its own cursor; out-of-bounds writes
-        (idle slots past max_len) are dropped by the scatter."""
+        (idle slots past max_len) are dropped by the scatter.
+
+        Quantized caches ('k_q' layout, DESIGN.md §8) quantize-on-append:
+        the fp k/v rows become integer codes plus one scale per (token,
+        head) row, written with the same per-slot scatter — a token's scale
+        never aliases another token's, so slot isolation is unaffected."""
         k_new, v_new = new_kv
         lens = jnp.asarray(cs["len"])
+        if "k_q" in cs:
+            from ..kernels.kv_pack import quantize_kv
+            bits = 4 if cs["k_q"].dtype == jnp.uint8 else 8
+            kq, ks = quantize_kv(k_new, bits)     # (B,Sq,Hkv,*), (B,Sq,Hkv)
+            vq, vs = quantize_kv(v_new, bits)
+            rows = {"k_q": kq, "v_q": vq, "k_scale": ks, "v_scale": vs}
+        else:
+            rows = {"k": _to_cache(k_new, cs["k"].dtype),
+                    "v": _to_cache(v_new, cs["v"].dtype)}
+
+        B, Sq = k_new.shape[0], k_new.shape[1]
         if lens.ndim:
-            B, Sq = k_new.shape[0], k_new.shape[1]
-            rows = jnp.arange(B)[:, None]
-            cols = lens[:, None] + jnp.arange(Sq)[None, :]
-            return {
-                "k": cs["k"].at[idx, rows, cols].set(
-                    _to_cache(k_new, cs["k"].dtype), mode="drop"),
-                "v": cs["v"].at[idx, rows, cols].set(
-                    _to_cache(v_new, cs["v"].dtype), mode="drop"),
-                "len": cs["len"],
-            }
-        start = (idx, 0, cs["len"], 0, 0)
-        return {
-            "k": jax.lax.dynamic_update_slice(
-                cs["k"], _to_cache(k_new, cs["k"].dtype)[None], start),
-            "v": jax.lax.dynamic_update_slice(
-                cs["v"], _to_cache(v_new, cs["v"].dtype)[None], start),
-            "len": cs["len"],
-        }
+            r = jnp.arange(B)[:, None]
+            c = lens[:, None] + jnp.arange(Sq)[None, :]
+            write = lambda buf, val: buf.at[idx, r, c].set(val, mode="drop")
+        else:
+            # start index (layer, batch=0, cursor, 0...) padded to buf rank
+            write = lambda buf, val: jax.lax.dynamic_update_slice(
+                buf, val[None],
+                (idx, 0, cs["len"]) + (0,) * (buf.ndim - 3))
+        out = {key: write(cs[key], val) for key, val in rows.items()}
+        out["len"] = cs["len"]
+        return out
+
+    def layer_cache(cs, idx):
+        """Per-layer slice of the stacked cache; works for the fp {'k','v'}
+        and the quantized {'k_q','v_q','k_scale','v_scale'} layouts alike."""
+        return {key: (val if key == "len" else
+                      jax.lax.dynamic_index_in_dim(val, idx, 0, False))
+                for key, val in cs.items()}
 
     def make_body(spec, with_cache):
         def body(carry, xs):
@@ -432,11 +448,7 @@ def lm_forward(params, cfg: ModelConfig, segments, *, tokens=None,
                 # the new token (XLA aliases the donated cache buffer).
                 h, cs = carry
                 lp, idx = xs
-                cache_l = {
-                    "k": jax.lax.dynamic_index_in_dim(cs["k"], idx, 0, False),
-                    "v": jax.lax.dynamic_index_in_dim(cs["v"], idx, 0, False),
-                    "len": cs["len"],
-                }
+                cache_l = layer_cache(cs, idx)
                 h2, nc, _, aux = block_apply(h, lp, cfg, spec, cache=cache_l)
                 return (h2, write_new_kv(cs, idx, nc)), aux
             h = carry
@@ -465,8 +477,7 @@ def lm_forward(params, cfg: ModelConfig, segments, *, tokens=None,
             lp = jax.tree.map(lambda a: a[-1], seg_full)
             cache_l = None
             if caches is not None:
-                cache_l = {"k": caches["k"][end - 1], "v": caches["v"][end - 1],
-                           "len": caches["len"]}
+                cache_l = layer_cache(caches, jnp.int32(end - 1))
             x, nc, taps, aux = block_apply(x, lp, cfg, spec, cache=cache_l,
                                            want_taps=True)
             aux_total = aux_total + aux
@@ -488,13 +499,29 @@ def lm_forward(params, cfg: ModelConfig, segments, *, tokens=None,
 
 
 def lm_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
-              as_specs: bool = False, per_slot_len: bool = False):
-    L = cfg.num_layers
+              as_specs: bool = False, per_slot_len: bool = False,
+              kv_bits: int = 16):
+    """kv_bits 16: fp {'k','v','len'}. kv_bits 8/4: the packed quantized
+    layout {'k_q','v_q','k_scale','v_scale','len'} (DESIGN.md §8) — integer
+    codes (int4 nibble-packed along head_dim) plus per-(token, head) f32
+    scales; ~4x/~7x fewer cache bytes than f32 K/V rows."""
+    L, Hkv = cfg.num_layers, cfg.num_kv_heads
     mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if as_specs else (
         lambda s, d: jnp.zeros(s, d))
     len_shape = (batch,) if per_slot_len else ()
-    return {"k": mk((L, batch, max_len, cfg.num_kv_heads, cfg.hd), dtype),
-            "v": mk((L, batch, max_len, cfg.num_kv_heads, cfg.hd), dtype),
+    if kv_bits in (8, 4):
+        from ..kernels.kv_pack import kv_code_dtype, kv_code_shape
+        dhp = kv_code_shape(cfg.hd, kv_bits)
+        cdt = kv_code_dtype(kv_bits)
+        return {"k_q": mk((L, batch, max_len, Hkv, dhp), cdt),
+                "v_q": mk((L, batch, max_len, Hkv, dhp), cdt),
+                "k_scale": mk((L, batch, max_len, Hkv), jnp.float32),
+                "v_scale": mk((L, batch, max_len, Hkv), jnp.float32),
+                "len": mk(len_shape, jnp.int32)}
+    if kv_bits != 16:
+        raise ValueError(f"kv_bits must be 16, 8 or 4, got {kv_bits}")
+    return {"k": mk((L, batch, max_len, Hkv, cfg.hd), dtype),
+            "v": mk((L, batch, max_len, Hkv, cfg.hd), dtype),
             "len": mk(len_shape, jnp.int32)}
 
 

@@ -8,7 +8,6 @@ a weight. Scales are clamped positive after each update (LSQ stability).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable, NamedTuple
 
 import jax

@@ -3,7 +3,8 @@
 The deployment side of the paper, grown into a real package:
 
 * ``scheduler``  — request queue + fixed slot table, continuous-batching refill
-* ``kv_cache``   — slot-state manager (per-layer KV cache, per-slot lengths)
+* ``kv_cache``   — slot-state manager (per-layer KV cache, per-slot lengths,
+  optional int8/int4 quantization with per-(token, head) scales — DESIGN.md §8)
 * ``engine``     — prefill/decode-separated step loop over the deployed model
 * ``metrics``    — latency/throughput recorder (tokens/sec, p50/p99 steps)
 

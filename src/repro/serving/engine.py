@@ -47,7 +47,7 @@ class ServingEngine:
 
     def __init__(self, params_int, cfg: ModelConfig, segments, *,
                  slots: int = 8, max_len: int = 512, dtype=jnp.float32,
-                 prefill_mode: str = "auto",
+                 prefill_mode: str = "auto", kv_bits: Optional[int] = None,
                  metrics: Optional[ServeMetrics] = None):
         self.cfg = cfg
         self.segments = segments
@@ -55,6 +55,7 @@ class ServingEngine:
         self.slots = slots
         self.max_len = max_len
         self.dtype = dtype
+        self.kv_bits = cfg.kv_bits if kv_bits is None else kv_bits
         self.scheduler = Scheduler(slots)
         self.metrics = metrics if metrics is not None else ServeMetrics()
         self.generated: list[list[int]] = [[] for _ in range(slots)]
@@ -65,10 +66,15 @@ class ServingEngine:
         if prefill_mode == "chunked" and cfg.family in _TOKEN_ONLY_FAMILIES:
             raise ValueError(
                 f"{cfg.family}: no KV slot cache; use prefill_mode='token'")
+        if prefill_mode == "token" and self.kv_bits != 16:
+            raise ValueError(
+                "kv_bits < 16 needs the chunked slot cache; token-mode "
+                "families keep the fp decode state")
         self.prefill_mode = prefill_mode
 
         if prefill_mode == "chunked":
-            self.kv = SlotKVCache(cfg, slots, max_len, dtype=dtype)
+            self.kv = SlotKVCache(cfg, slots, max_len, dtype=dtype,
+                                  kv_bits=self.kv_bits)
             self.state = None
             self._prefill_fns: dict[int, callable] = {}
         else:
@@ -120,7 +126,10 @@ class ServingEngine:
             cfg, segments, dtype = self.cfg, self.segments, self.dtype
 
             def pf(params, tokens):
-                st = api.decode_state(cfg, 1, bucket, dtype=dtype)
+                # prefill always runs on the fp cache regardless of
+                # cfg.kv_bits; quantization happens on slot insert
+                st = api.decode_state(cfg, 1, bucket, dtype=dtype,
+                                      kv_bits=16)
                 logits, st2, _, _ = api.forward(
                     params, cfg, segments, state=st, tokens=tokens)
                 return logits, st2

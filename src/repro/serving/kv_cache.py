@@ -1,10 +1,22 @@
-"""Slot-state manager: per-layer KV cache with per-slot lengths (DESIGN.md §7).
+"""Slot-state manager: per-layer KV cache with per-slot lengths (DESIGN.md §7)
+and optional int8/int4 quantization (DESIGN.md §8).
 
-The decode cache is one stacked buffer {'k','v': (L, slots, max_len, Hkv, hd),
-'len': (slots,)}. Each slot masks and appends at its OWN cursor, so refilling
-a finished slot with a new request cannot read the previous occupant's
-entries — the seed engine's single global cursor could (stale rows below the
-shared ``len`` stayed attendable across refills).
+fp (kv_bits=16): one stacked buffer {'k','v': (L, slots, max_len, Hkv, hd),
+'len': (slots,)}. Quantized (kv_bits=8/4): the packed layout
+{'k_q','v_q': integer codes (int4 nibble-packed along head_dim),
+'k_scale','v_scale': (L, slots, max_len, Hkv) f32 per-(token, head) scales,
+'len': (slots,)}.
+
+Each slot masks and appends at its OWN cursor, so refilling a finished slot
+with a new request cannot read the previous occupant's entries — the seed
+engine's single global cursor could (stale rows below the shared ``len``
+stayed attendable across refills). Per-token scales keep that property under
+quantization: a slot's rows never share a scale with another slot or token.
+
+Prefill writes through the quantizer: the batch-1 prefill cache stays fp (one
+forward at full precision), and ``insert_prefill`` quantizes its rows on the
+way into the slot buffers. Decode appends quantize in
+``models/transformer.write_new_kv``.
 
 All mutations are jitted with donated operands so XLA aliases the cache
 buffers instead of copying the whole table per admission.
@@ -18,14 +30,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ModelConfig
+from ..kernels.kv_pack import quantize_kv
 from ..models import api
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _reset(state, slot):
-    return {"k": state["k"].at[:, slot].set(0),
-            "v": state["v"].at[:, slot].set(0),
-            "len": state["len"].at[slot].set(0)}
+    return {key: (val.at[slot].set(0) if key == "len"
+                  else val.at[:, slot].set(jnp.zeros((), val.dtype)))
+            for key, val in state.items()}
 
 
 @functools.partial(jax.jit, donate_argnums=(0,),
@@ -41,29 +54,56 @@ def _insert(state, pstate, slot, length, bucket: int):
             "len": state["len"].at[slot].set(length)}
 
 
+@functools.partial(jax.jit, donate_argnums=(0,),
+                   static_argnames=("bucket", "bits"))
+def _insert_quant(state, pstate, slot, length, bucket: int, bits: int):
+    """Quantize-on-insert: the fp prefill rows become packed codes plus
+    per-(token, head) scales as they scatter into ``slot``."""
+    kq, ks = quantize_kv(pstate["k"][:, 0], bits)   # (L, bucket, Hkv, *)
+    vq, vs = quantize_kv(pstate["v"][:, 0], bits)
+    return {"k_q": state["k_q"].at[:, slot, :bucket].set(kq),
+            "v_q": state["v_q"].at[:, slot, :bucket].set(vq),
+            "k_scale": state["k_scale"].at[:, slot, :bucket].set(ks),
+            "v_scale": state["v_scale"].at[:, slot, :bucket].set(vs),
+            "len": state["len"].at[slot].set(length)}
+
+
 class SlotKVCache:
     """Slot table over the transformer-family decode cache."""
 
     def __init__(self, cfg: ModelConfig, slots: int, max_len: int,
-                 dtype=jnp.float32):
+                 dtype=jnp.float32, kv_bits: int | None = None):
         self.cfg = cfg
         self.slots = slots
         self.max_len = max_len
         self.dtype = dtype
+        self.kv_bits = cfg.kv_bits if kv_bits is None else kv_bits
         self.state = api.decode_state(cfg, slots, max_len, dtype=dtype,
-                                      per_slot_len=True)
+                                      per_slot_len=True,
+                                      kv_bits=self.kv_bits)
+
+    @property
+    def quantized(self) -> bool:
+        return self.kv_bits in (8, 4)
 
     def reset_slot(self, slot: int) -> None:
-        """Zero a slot's K/V rows and rewind its cursor (request eviction)."""
+        """Zero a slot's K/V rows (codes AND scales when quantized) and
+        rewind its cursor (request eviction)."""
         self.state = _reset(self.state, jnp.int32(slot))
 
     def insert_prefill(self, slot: int, pstate, length: int,
                        bucket: int) -> None:
-        """Install a prefilled batch-1 cache (allocated with max_len=bucket)
-        into ``slot`` with the slot cursor at ``length``."""
+        """Install a prefilled batch-1 fp cache (allocated with
+        max_len=bucket) into ``slot`` with the slot cursor at ``length``,
+        quantizing the rows on the way in when kv_bits < 16."""
         assert bucket <= self.max_len, (bucket, self.max_len)
-        self.state = _insert(self.state, pstate, jnp.int32(slot),
-                             jnp.int32(length), bucket)
+        if self.quantized:
+            self.state = _insert_quant(self.state, pstate, jnp.int32(slot),
+                                       jnp.int32(length), bucket,
+                                       self.kv_bits)
+        else:
+            self.state = _insert(self.state, pstate, jnp.int32(slot),
+                                 jnp.int32(length), bucket)
 
     def lengths(self) -> np.ndarray:
         return np.asarray(self.state["len"])

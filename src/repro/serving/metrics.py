@@ -34,8 +34,17 @@ class ServeMetrics:
                 continue
             out[f"{kind}_steps"] = len(lat)
             out[f"{kind}_tokens"] = toks
-            out[f"{kind}_p50_ms"] = float(np.percentile(lat, 50) * 1e3)
-            out[f"{kind}_p99_ms"] = float(np.percentile(lat, 99) * 1e3)
+            # sub-2-sample windows (tiny --quick bench runs): interpolating
+            # percentiles is meaningless and np.percentile warns/raises on
+            # degenerate inputs depending on dtype — report the lone sample
+            # as every percentile instead of crashing the bench job.
+            if len(lat) < 2:
+                p50 = p99 = float(lat[0] * 1e3)
+            else:
+                p50 = float(np.percentile(lat, 50) * 1e3)
+                p99 = float(np.percentile(lat, 99) * 1e3)
+            out[f"{kind}_p50_ms"] = p50
+            out[f"{kind}_p99_ms"] = p99
             out[f"{kind}_mean_ms"] = float(lat.mean() * 1e3)
         out["total_tokens"] = total_tokens
         busy = sum(s for _, s, _ in self._events)

@@ -1,0 +1,268 @@
+"""Quantized KV cache tests (DESIGN.md §8).
+
+Invariants:
+* per-(token, head) quantize/dequantize round-trips within the grid's
+  half-step error bound for both kv_bits;
+* int4 nibble packing along head_dim is lossless over the code grid;
+* the fused Pallas decode-attention kernel matches the dequantize-then-attend
+  reference on the SAME quantized cache to float ulp, and the fp32 reference
+  within the quantization error budget;
+* slot isolation under refill holds EXACTLY with packed buffers — a request
+  decoded in a recycled slot emits the tokens it emits on a fresh engine
+  (mirrors test_serving_subsystem.py for the fp cache);
+* kv_bits=8/4 engine token streams track the fp32-cache streams on the
+  tier-1 model within the asserted agreement tolerance (int8 is empirically
+  exact here; int4 is held to a looser floor);
+* ServeMetrics percentile reporting survives sub-2-sample windows (the
+  --quick bench path the CI gate runs).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.policy import QuantPolicy
+from repro.core.qat import calibrate_weight_scales, default_bits_fn, \
+    deploy_params
+from repro.kernels import ops
+from repro.kernels.kv_pack import (dequantize_kv, kv_qmax, pack_nibbles_last,
+                                   quantize_kv, unpack_nibbles_last)
+from repro.models import api
+from repro.models.attention import _repeat_kv, cached_decode_attention
+from repro.serving import Request, ServeMetrics, ServingEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _engine(kv_bits, *, slots=2, policy="int4", max_len=64):
+    cfg = reduced(get_config("stablelm-3b")).replace(act="gelu")
+    n = cfg.num_layers
+    if policy == "fp32":
+        pol, use_pallas, fuse = None, False, False
+    else:
+        pol = QuantPolicy(num_layers=n, mode="int",
+                          last_k_int4=n if policy == "int4" else 0)
+        use_pallas, fuse = True, policy == "int4"
+    segs = api.segments_for(cfg, pol, use_pallas=use_pallas,
+                            fuse_epilogue=fuse)
+    params = api.init_model(cfg, KEY)
+    if pol is not None:
+        params = calibrate_weight_scales(params, default_bits_fn(cfg, pol))
+        params = deploy_params(params, cfg, segs)
+    return ServingEngine(params, cfg, segs, slots=slots, max_len=max_len,
+                         kv_bits=kv_bits), cfg
+
+
+def _streams(eng, prompts, max_new=6):
+    for p in prompts:
+        eng.submit(Request(prompt=p.copy(), max_new_tokens=max_new))
+    eng.run_until_drained()
+    return {r.rid: r.out.tolist() for r in eng.done}
+
+
+# ------------------------------------------------------------- round-trip
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_kv_roundtrip_error_bound(bits):
+    """|x - dq(q(x))| <= scale/2 per element: rounding to the grid never
+    loses more than half a step (scales are per-(token, head) amax / qmax,
+    so nothing clips)."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((2, 16, 4, 32)) * 3.0, jnp.float32)
+    codes, scales = quantize_kv(x, bits)
+    assert codes.dtype == (jnp.uint8 if bits == 4 else jnp.int8)
+    assert codes.shape == (2, 16, 4, 32 // (2 if bits == 4 else 1))
+    assert scales.shape == (2, 16, 4)
+    dq = np.asarray(dequantize_kv(codes, scales))
+    bound = np.broadcast_to(np.asarray(scales)[..., None] * 0.5 + 1e-7,
+                            x.shape)
+    np.testing.assert_array_less(np.abs(np.asarray(x) - dq), bound)
+    # relative error shrinks with bits: amax/qmax halves the step per bit
+    rel = np.abs(np.asarray(x) - dq).max() / np.abs(np.asarray(x)).max()
+    assert rel < 0.5 / kv_qmax(bits) + 1e-3
+
+
+def test_kv_zero_rows_quantize_to_zero():
+    """All-zero rows (cache padding) must survive exactly: eps-floored scale,
+    zero codes, zero dequant."""
+    codes, scales = quantize_kv(jnp.zeros((3, 4, 8)), 4)
+    np.testing.assert_array_equal(np.asarray(dequantize_kv(codes, scales)),
+                                  np.zeros((3, 4, 8), np.float32))
+
+
+def test_pack_nibbles_last_roundtrip():
+    rng = np.random.default_rng(1)
+    codes = jnp.asarray(rng.integers(-7, 9, size=(5, 3, 16)), jnp.int8)
+    np.testing.assert_array_equal(
+        np.asarray(unpack_nibbles_last(pack_nibbles_last(codes))),
+        np.asarray(codes))
+
+
+# ------------------------------------------------- fused decode attention
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_decode_attention_kernel_matches_reference(bits):
+    """The Pallas kernel (in-VMEM dequant + online softmax + fp new-token
+    fold-in) must match the jnp dequantize-then-attend reference on the SAME
+    packed cache near-exactly, and the full-precision cache within the
+    quantization error budget."""
+    rng = np.random.default_rng(0)
+    B, S, H, Hkv, dh = 3, 64, 8, 4, 16
+    G = H // Hkv
+    q = jnp.asarray(rng.standard_normal((B, 1, H, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, Hkv, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, Hkv, dh)), jnp.float32)
+    kn = jnp.asarray(rng.standard_normal((B, 1, Hkv, dh)), jnp.float32)
+    vn = jnp.asarray(rng.standard_normal((B, 1, Hkv, dh)), jnp.float32)
+    lens = jnp.asarray([5, 37, 64], jnp.int32)   # per-slot cursors
+
+    kq, ks = quantize_kv(k, bits)
+    vq, vs = quantize_kv(v, bits)
+    out = np.asarray(ops.decode_attention(q[:, 0], kq, vq, ks, vs,
+                                          kn[:, 0], vn[:, 0], lens))
+    ref = np.asarray(cached_decode_attention(
+        q, _repeat_kv(dequantize_kv(kq, ks), G),
+        _repeat_kv(dequantize_kv(vq, vs), G),
+        _repeat_kv(kn, G), _repeat_kv(vn, G), lens)[:, 0])
+    np.testing.assert_allclose(out, ref, rtol=0, atol=1e-5)
+
+    fp = np.asarray(cached_decode_attention(
+        q, _repeat_kv(k, G), _repeat_kv(v, G),
+        _repeat_kv(kn, G), _repeat_kv(vn, G), lens)[:, 0])
+    tol = {8: 0.02, 4: 0.35}[bits]
+    np.testing.assert_allclose(out, fp, rtol=0, atol=tol)
+
+
+def test_decode_attention_respects_per_slot_length():
+    """Rows at positions >= a slot's cursor must contribute nothing: poisoning
+    them cannot change the output (the slot-isolation property at the kernel
+    level)."""
+    rng = np.random.default_rng(2)
+    B, S, Hkv, dh = 2, 32, 2, 8
+    q = jnp.asarray(rng.standard_normal((B, 2 * Hkv, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, Hkv, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, Hkv, dh)), jnp.float32)
+    kn = jnp.asarray(rng.standard_normal((B, Hkv, dh)), jnp.float32)
+    vn = jnp.asarray(rng.standard_normal((B, Hkv, dh)), jnp.float32)
+    lens = jnp.asarray([4, 9], jnp.int32)
+    kq, ks = quantize_kv(k, 4)
+    vq, vs = quantize_kv(v, 4)
+    out = np.asarray(ops.decode_attention(q, kq, vq, ks, vs, kn, vn, lens))
+
+    # poison every row past the cursor with large codes and scales
+    mask = (np.arange(S)[None, :, None] >= np.asarray(lens)[:, None, None])
+    kq2 = jnp.where(jnp.asarray(mask)[..., None], jnp.uint8(0xFF), kq)
+    vq2 = jnp.where(jnp.asarray(mask)[..., None], jnp.uint8(0xFF), vq)
+    ks2 = jnp.where(jnp.asarray(mask), 1e4, ks)
+    vs2 = jnp.where(jnp.asarray(mask), 1e4, vs)
+    out2 = np.asarray(ops.decode_attention(q, kq2, vq2, ks2, vs2,
+                                           kn, vn, lens))
+    np.testing.assert_array_equal(out, out2)
+
+
+# ------------------------------------------------------- engine end-to-end
+
+@pytest.mark.parametrize("kv_bits", [8, 4])
+def test_quantized_cache_slot_isolation_across_refills(kv_bits):
+    """A request decoded in a recycled slot must produce exactly the tokens
+    it produces on a fresh engine — with PACKED buffers the reset must zero
+    codes AND scales, and per-token scales must never alias across refills."""
+    r1 = np.arange(1, 11, dtype=np.int32)
+    r2 = np.array([7, 3, 11, 2], np.int32)
+
+    eng, _ = _engine(kv_bits, slots=1)
+    assert eng.kv.quantized and eng.kv.kv_bits == kv_bits
+    recycled = _streams(eng, [r1, r2])[1]
+
+    fresh_eng, _ = _engine(kv_bits, slots=1)
+    fresh = _streams(fresh_eng, [r2])[0]
+    np.testing.assert_array_equal(recycled, fresh)
+
+
+@pytest.mark.parametrize("kv_bits", [8, 4])
+def test_quantized_concurrent_slots_match_solo_runs(kv_bits):
+    prompts = [np.array([5, 9, 2], np.int32),
+               np.array([8, 8, 1, 4, 12], np.int32)]
+    eng, _ = _engine(kv_bits, slots=2)
+    batched = _streams(eng, prompts, max_new=5)
+    for i, p in enumerate(prompts):
+        solo, _ = _engine(kv_bits, slots=2)
+        np.testing.assert_array_equal(batched[i],
+                                      _streams(solo, [p], max_new=5)[0])
+
+
+def test_kv_bits_token_streams_track_fp32():
+    """Acceptance: kv_bits=8/4 decode streams match the fp32-cache stream on
+    the tier-1 model within tolerance. With fp32 weights isolating the KV
+    effect, int8 KV is empirically EXACT on this model and asserted so;
+    int4 KV is held to >= 60% token agreement with an exact first token
+    (prefill runs at full precision and quantizes on insert)."""
+    prompts = [np.array([3, 1, 4, 1, 5], np.int32),
+               np.array([2, 7, 1, 8, 2, 8], np.int32),
+               np.array([9, 9, 9], np.int32)]
+    outs = {}
+    for kv_bits in (16, 8, 4):
+        eng, _ = _engine(kv_bits, policy="fp32")
+        outs[kv_bits] = _streams(eng, prompts, max_new=8)
+
+    assert outs[8] == outs[16]
+    toks16 = [t for rid in outs[16] for t in outs[16][rid]]
+    toks4 = [t for rid in outs[4] for t in outs[4][rid]]
+    agree = np.mean([a == b for a, b in zip(toks16, toks4)])
+    assert agree >= 0.6, f"int4 KV stream agreement {agree:.2f}"
+    for rid in outs[16]:   # first token comes out of the fp prefill pass
+        assert outs[4][rid][0] == outs[16][rid][0]
+
+
+def test_pallas_decode_attention_matches_jnp_path_end_to_end():
+    """QuantPolicy-selected kernel vs the dequantize reference: deployed int8
+    weights with use_pallas on/off must emit the same tokens for the same
+    kv_bits (the integer matmuls are exact; decode attention differs only in
+    fp32 summation order)."""
+    prompts = [np.array([3, 1, 4, 1, 5], np.int32),
+               np.array([2, 7, 1, 8], np.int32)]
+    cfg = reduced(get_config("stablelm-3b")).replace(act="gelu")
+    n = cfg.num_layers
+    pol = QuantPolicy(num_layers=n, mode="int", last_k_int4=0)
+    streams = []
+    for use_pallas in (False, True):
+        segs = api.segments_for(cfg, pol, use_pallas=use_pallas)
+        params = api.init_model(cfg, KEY)
+        params = calibrate_weight_scales(params, default_bits_fn(cfg, pol))
+        params = deploy_params(params, cfg, segs)
+        eng = ServingEngine(params, cfg, segs, slots=2, max_len=64, kv_bits=8)
+        streams.append(_streams(eng, prompts, max_new=5))
+    assert streams[0] == streams[1]
+
+
+def test_token_mode_rejects_quantized_kv():
+    """Token-mode families keep the fp decode state; a quantized cache there
+    would silently take the legacy static-scale path — reject up front."""
+    cfg = reduced(get_config("stablelm-3b"))
+    segs = api.segments_for(cfg, None)
+    params = api.init_model(cfg, KEY)
+    with pytest.raises(ValueError, match="kv_bits"):
+        ServingEngine(params, cfg, segs, slots=1, max_len=32,
+                      prefill_mode="token", kv_bits=8)
+
+
+# ------------------------------------------------------------------ metrics
+
+def test_metrics_single_sample_percentiles():
+    """Sub-2-sample windows (tiny --quick bench runs) must not crash the
+    summary: the lone sample is every percentile."""
+    m = ServeMetrics()
+    m.record("decode", 0.004, 1)
+    s = m.summary()
+    assert s["decode_steps"] == 1
+    assert s["decode_p50_ms"] == pytest.approx(4.0)
+    assert s["decode_p99_ms"] == pytest.approx(4.0)
+    assert "prefill_p50_ms" not in s          # zero-sample kind stays absent
+    assert m.report()                          # renders without crashing
+
+
+def test_metrics_empty_summary():
+    s = ServeMetrics().summary()
+    assert s["total_tokens"] == 0
+    assert s["tokens_per_s"] == 0.0

@@ -6,9 +6,8 @@ quantization error; mixed 4/8 segments; distillation losses flow.
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.configs import TrainHParams, get_config, reduced
+from repro.configs import get_config, reduced
 from repro.core import qat
 from repro.core.distill import combine_losses, minilm_losses, output_loss
 from repro.core.policy import QuantPolicy

@@ -14,7 +14,7 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
-from repro.distributed.sharding import batch_spec, param_specs, spec_for
+from repro.distributed.sharding import batch_spec, param_specs
 from repro.models import api
 
 

@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import CheckpointManager
-from repro.data import classification_batches, lm_batches
+from repro.data import lm_batches
 from repro.data.synthetic import SyntheticLM
 from repro.distributed.compression import compressed_grad_mean
 from repro.launch.train import StragglerWatchdog

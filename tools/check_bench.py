@@ -1,0 +1,115 @@
+#!/usr/bin/env python3
+"""Bench gate: fail CI when serving throughput regresses vs the committed
+baseline.
+
+Compares every variant of a fresh ``BENCH_serve.json`` (written by
+``python -m benchmarks.serve_latency``) against
+``benchmarks/BENCH_serve_baseline.json``. Absolute interpret-mode tok/s is
+machine-dependent (the baseline is recorded on a dev box, CI runs on shared
+runners), so the gate is on NORMALIZED throughput: each variant's tok/s
+divided by the same run's ``fp32_kv16`` tok/s. That ratio cancels host
+speed and pins what the serving rework actually owns — the relative cost of
+the quantized/pallas paths vs the fp path. A variant fails when its ratio
+drops more than ``--max-regression`` (default 30%) below the baseline
+ratio. Absolute tok/s is still printed, and a collapse of the reference
+variant itself (> 10x slower than baseline) fails too, as that signals a
+broken harness rather than a slow runner.
+
+Variants present only on one side are reported but never fail the gate (so
+adding a variant doesn't require a lockstep baseline bump).
+
+Usage:
+  python tools/check_bench.py [--current BENCH_serve.json]
+                              [--baseline benchmarks/BENCH_serve_baseline.json]
+                              [--max-regression 0.30]
+  python tools/check_bench.py --update   # rewrite the baseline from current
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DEFAULT_CURRENT = "BENCH_serve.json"
+DEFAULT_BASELINE = ROOT / "benchmarks" / "BENCH_serve_baseline.json"
+REFERENCE_VARIANT = "fp32_kv16"
+
+
+def load(path: pathlib.Path) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    if "variants" not in data:
+        raise SystemExit(f"FAIL: {path} has no 'variants' key")
+    return data
+
+
+def _ref_tps(data: dict, label: str) -> float:
+    ref = data["variants"].get(REFERENCE_VARIANT)
+    if ref is None:
+        raise SystemExit(
+            f"FAIL: {label} run lacks the {REFERENCE_VARIANT!r} reference "
+            "variant needed for host-speed normalization")
+    return ref["tokens_per_s"]
+
+
+def main() -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--current", default=DEFAULT_CURRENT)
+    p.add_argument("--baseline", default=str(DEFAULT_BASELINE))
+    p.add_argument("--max-regression", type=float, default=0.30,
+                   help="fail when normalized tok/s drops more than this "
+                        "fraction below the baseline ratio")
+    p.add_argument("--update", action="store_true",
+                   help="overwrite the baseline with the current results")
+    args = p.parse_args()
+
+    current = load(pathlib.Path(args.current))
+    if args.update:
+        with open(args.baseline, "w") as f:
+            json.dump(current, f, indent=2, sort_keys=True)
+        print(f"OK: baseline updated -> {args.baseline}")
+        return 0
+
+    baseline = load(pathlib.Path(args.baseline))
+    cur_ref = _ref_tps(current, "current")
+    base_ref = _ref_tps(baseline, "baseline")
+
+    failures = []
+    if cur_ref < base_ref / 10.0:
+        print(f"FAIL: reference variant {REFERENCE_VARIANT} collapsed: "
+              f"{cur_ref:.1f} tok/s vs baseline {base_ref:.1f} (>10x) — "
+              "harness breakage, not host speed")
+        failures.append(REFERENCE_VARIANT)
+
+    for name, base in sorted(baseline["variants"].items()):
+        if name == REFERENCE_VARIANT:
+            continue
+        cur = current["variants"].get(name)
+        if cur is None:
+            print(f"WARN: variant {name!r} missing from current run")
+            continue
+        b = base["tokens_per_s"] / base_ref
+        c = cur["tokens_per_s"] / cur_ref
+        floor = b * (1.0 - args.max_regression)
+        status = "FAIL" if c < floor else "ok"
+        print(f"{status}: {name}: {c:.3f}x of {REFERENCE_VARIANT} "
+              f"({cur['tokens_per_s']:.1f} tok/s) vs baseline {b:.3f}x "
+              f"({base['tokens_per_s']:.1f} tok/s), floor {floor:.3f}x")
+        if c < floor:
+            failures.append(name)
+    for name in sorted(set(current["variants"]) - set(baseline["variants"])):
+        print(f"NOTE: new variant {name!r} has no baseline yet")
+
+    if failures:
+        print(f"FAIL: {len(failures)} variant(s) regressed >"
+              f"{args.max_regression:.0%}: {', '.join(failures)}")
+        return 1
+    print("OK: no serving-throughput regression beyond "
+          f"{args.max_regression:.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
