@@ -30,21 +30,22 @@ import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.core.policy import QuantPolicy
-from repro.core.qat import (calibrate_weight_scales, default_bits_fn,
-                            deploy_params)
+from repro.deploy import ExecutionPlan, deploy
 from repro.models import api
 from repro.serving import Request, ServeMetrics, ServingEngine
 
 
-def _build(cfg, policy, use_pallas, fuse):
-    segments = api.segments_for(cfg, policy, use_pallas=use_pallas,
-                                fuse_epilogue=fuse)
+def _build(cfg, policy, backend, fuse):
+    """Deployed params for (policy, backend, fuse).
+
+    The packed weights are independent of kv_bits, so callers cache these
+    across the kv sweep and only the (cheap) per-variant plan is rebuilt."""
+    plan = ExecutionPlan.build(cfg, policy, backend=backend,
+                               fuse_epilogue=fuse)
     params = api.init_model(cfg, jax.random.PRNGKey(0))
     if policy is not None:
-        params = calibrate_weight_scales(params,
-                                         default_bits_fn(cfg, policy))
-        params = deploy_params(params, cfg, segments)
-    return params, segments
+        params = deploy(params, plan).params
+    return params
 
 
 def _serve_burst(eng, cfg, n_requests, max_new, seed=0):
@@ -77,23 +78,24 @@ def run_variants(quick: bool = False) -> dict:
 
     int8_pol = QuantPolicy(num_layers=n, mode="int", last_k_int4=0)
     int4_pol = QuantPolicy(num_layers=n, mode="int", last_k_int4=n)
-    # (name, policy, use_pallas, fuse_epilogue, kv_bits)
+    # (name, policy, backend, fuse_epilogue, kv_bits)
     variants = [
-        ("fp32_kv16", None, False, False, 16),
-        ("int8_kv16", int8_pol, True, False, 16),
-        ("int4_kv16", int4_pol, True, True, 16),
-        ("int4_kv8", int4_pol, True, True, 8),
-        ("int4_kv4", int4_pol, True, True, 4),
+        ("fp32_kv16", None, "reference", False, 16),
+        ("int8_kv16", int8_pol, "pallas", False, 16),
+        ("int4_kv16", int4_pol, "pallas", True, 16),
+        ("int4_kv8", int4_pol, "pallas", True, 8),
+        ("int4_kv4", int4_pol, "pallas", True, 4),
     ]
     results = {}
     built = {}   # identical deployed params reused across kv_bits variants
-    for name, policy, use_pallas, fuse, kv_bits in variants:
-        key = (id(policy), use_pallas, fuse)
+    for name, policy, backend, fuse, kv_bits in variants:
+        key = (id(policy), backend, fuse)
         if key not in built:
-            built[key] = _build(cfg, policy, use_pallas, fuse)
-        params, segments = built[key]
-        eng = ServingEngine(params, cfg, segments, slots=slots, max_len=64,
-                            kv_bits=kv_bits)
+            built[key] = _build(cfg, policy, backend, fuse)
+        params = built[key]
+        plan = ExecutionPlan.build(cfg, policy, backend=backend,
+                                   kv_bits=kv_bits, fuse_epilogue=fuse)
+        eng = ServingEngine(params, plan, slots=slots, max_len=64)
         _warmup(eng, cfg)
         eng.metrics = ServeMetrics()
         _serve_burst(eng, cfg, n_requests=n_requests, max_new=max_new)

@@ -2,10 +2,17 @@
 
   fp model -> calibrate (abs-max weights, percentile acts)
            -> QAT (LSQ with MSE-based scale gradients, last half int4)
-           -> deploy packed int4/int8 -> verify int parity -> generate.
+           -> deploy() packed int4/int8 DeployedModel -> verify int parity
+           -> save/load the artifact -> generate from the loaded model.
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+All execution choices (segments, kernels, KV precision, decode dtype) live
+in an ``ExecutionPlan`` (repro.deploy, DESIGN.md §9); the deployed weights +
+plan round-trip disk as a ``DeployedModel`` artifact.
+
+Run:  PYTHONPATH=src python examples/quickstart.py [--quick]
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -14,20 +21,24 @@ from repro.configs import get_config, reduced
 from repro.core import qat
 from repro.core.policy import QuantPolicy
 from repro.data import lm_batches
+from repro.deploy import DeployedModel, ExecutionPlan, deploy
 from repro.models import api
 from repro.models.transformer import lm_loss
 from repro.optim import adam_init, adam_update, linear_warmup_decay
 
 
-def main():
+def main(quick: bool = False):
     cfg = reduced(get_config("stablelm-3b"))
     n = cfg.num_layers
+    qat_steps = 6 if quick else 30
     print(f"model: {cfg.name} (reduced) {n} layers, d={cfg.d_model}")
 
-    # --- policy: paper's best config — last 50% of layers int4, rest int8
+    # --- plans: paper's best policy — last 50% of layers int4, rest int8.
+    # One plan per phase; each resolves segments/kernel choices up front.
     policy = QuantPolicy(num_layers=n, mode="fake", last_k_int4=n // 2,
                          grad_mode="mse")
-    segments = api.segments_for(cfg, policy)
+    qat_plan = ExecutionPlan.build(cfg, policy)
+    fp_plan = ExecutionPlan.build(cfg, None)
     print("policy:", policy.describe())
 
     params = api.init_model(cfg, jax.random.PRNGKey(0))
@@ -36,8 +47,7 @@ def main():
     # --- calibration (paper §3.1)
     params = qat.calibrate_weight_scales(params,
                                          qat.default_bits_fn(cfg, policy))
-    fp_segs = api.segments_for(cfg, None)
-    fwd = lambda p, b: api.forward(p, cfg, fp_segs,
+    fwd = lambda p, b: api.forward(p, fp_plan,
                                    tokens=jnp.asarray(b["tokens"]))[0]
     it = iter(data)
     params = qat.calibrate_act_scales(params, cfg, policy, fwd,
@@ -46,12 +56,12 @@ def main():
 
     # --- QAT with LSQ-MSE scale gradients
     opt = adam_init(params)
-    sched = linear_warmup_decay(30, 0.1)
+    sched = linear_warmup_decay(qat_steps, 0.1)
 
     @jax.jit
     def step(p, o, toks, labels):
         def loss_fn(pp):
-            logits, _, _, aux = api.forward(pp, cfg, segments, tokens=toks)
+            logits, _, _, aux = api.forward(pp, qat_plan, tokens=toks)
             return lm_loss(logits, labels) + aux
         loss, g = jax.value_and_grad(loss_fn)(p)
         p, o = adam_update(p, g, o, lr_by_group={"weights": 1e-3,
@@ -60,18 +70,19 @@ def main():
                            schedule_fn=sched, grad_clip=1.0)
         return p, o, loss
 
-    for i in range(30):
+    for i in range(qat_steps):
         b = next(it)
         params, opt, loss = step(params, opt, jnp.asarray(b["tokens"]),
                                  jnp.asarray(b["labels"]))
         if i % 10 == 0:
             print(f"QAT step {i:3d} loss {float(loss):.4f}")
 
-    # --- deploy: pack int4 nibbles / int8 codes
+    # --- deploy: pack int4 nibbles / int8 codes into a DeployedModel.
+    # recalibrate=False keeps the LEARNED LSQ scales (train==deploy parity).
     int_policy = QuantPolicy(num_layers=n, mode="int", last_k_int4=n // 2)
-    int_segments = api.segments_for(cfg, int_policy)
-    deployed = qat.deploy_params(params, cfg, int_segments)
-    wq = deployed["layers"][1]["ffn"]["w1"]["wq"]
+    int_plan = ExecutionPlan.build(cfg, int_policy)
+    model = deploy(params, int_plan, recalibrate=False)
+    wq = model.params["layers"][1]["ffn"]["w1"]["wq"]
     print(f"deployed: int4 packed ffn.w1 {wq.shape} {wq.dtype} "
           f"({wq.size * wq.dtype.itemsize} bytes vs "
           f"{np.prod(params['layers']['ffn']['w1']['w'].shape[1:]) * (n // 2) * 4} fp32)")
@@ -79,18 +90,26 @@ def main():
     # --- parity: deployed int path == QAT fake-quant path
     b = next(it)
     toks = jnp.asarray(b["tokens"])
-    lf, *_ = api.forward(params, cfg, segments, tokens=toks)
-    li, *_ = api.forward(deployed, cfg, int_segments, tokens=toks)
+    lf, *_ = api.forward(params, qat_plan, tokens=toks)
+    li, *_ = api.forward(model.params, int_plan, tokens=toks)
     rel = float(jnp.max(jnp.abs(lf - li)) / jnp.max(jnp.abs(lf)))
     print(f"fake-vs-int parity: rel err {rel:.2e} (expect < 1e-4)")
     assert rel < 1e-4
 
-    # --- greedy generation with the int4/int8 model
-    state = api.decode_state(cfg, 1, 64, dtype=jnp.float32)
+    # --- artifact round trip: serve runs load this, never the fp weights
+    import tempfile
+    with tempfile.TemporaryDirectory() as td:
+        path = model.save(f"{td}/artifact")
+        loaded = DeployedModel.load(path)
+    assert loaded.plan.segments == int_plan.segments
+    print("artifact save/load round trip OK")
+
+    # --- greedy generation with the loaded int4/int8 model
+    state = loaded.plan.decode_state(1, 64)
     tok = jnp.asarray([[5]], jnp.int32)
     out = []
     for _ in range(12):
-        logits, state, _, _ = api.forward(deployed, cfg, int_segments,
+        logits, state, _, _ = api.forward(loaded.params, loaded.plan,
                                           state=state, tokens=tok)
         tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
         out.append(int(tok[0, 0]))
@@ -99,4 +118,7 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke mode: fewer QAT steps")
+    main(quick=ap.parse_args().quick)

@@ -1,14 +1,20 @@
 """Serve a quantized model with batched requests (the paper's deployment).
 
-Builds an int4/int8 deployed model (calibrate -> pack), spins up the
-continuous-batching engine from ``repro.serving`` (DESIGN.md §7) — chunked
-prefill + slot-isolated KV cache + latency metrics — submits a burst of
-requests and reports throughput. On TPU, pass use_pallas=True to
-api.segments_for to route the matmuls through the int4/int8 Pallas kernels
-(with the fused dequant+bias+GELU decode epilogue on gelu-FFN archs).
+The deployment flow (DESIGN.md §9): build an ``ExecutionPlan`` (segments +
+kernel selection + KV precision resolved once), ``deploy()`` the packed
+int4/int8 ``DeployedModel``, ``save()`` it, then serve the RELOADED artifact
+through the continuous-batching engine (``repro.serving``, DESIGN.md §7) —
+chunked prefill, slot-isolated KV cache, latency metrics. The serve side
+never touches fp weights and never recalibrates, and its token streams are
+byte-identical to serving the in-memory model (asserted below).
 
-Run:  PYTHONPATH=src python examples/serve_int4.py
+Pass backend="pallas" to route matmuls through the int4/int8 Pallas kernels
+(fused dequant+bias+GELU decode epilogue; interpret mode off-TPU).
+
+Run:  PYTHONPATH=src python examples/serve_int4.py [--quick]
 """
+import argparse
+import tempfile
 import time
 
 import jax
@@ -16,45 +22,59 @@ import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.core.policy import QuantPolicy
-from repro.core.qat import (calibrate_weight_scales, default_bits_fn,
-                            deploy_params)
-from repro.serving import Request, ServingEngine
+from repro.deploy import DeployedModel, ExecutionPlan, deploy
 from repro.models import api
+from repro.serving import Request, ServingEngine
 
 
-def main():
-    cfg = reduced(get_config("qwen2.5-32b"))
-    n = cfg.num_layers
-    policy = QuantPolicy(num_layers=n, mode="int", last_k_int4=n // 2)
-    segments = api.segments_for(cfg, policy)
-
-    params = api.init_model(cfg, jax.random.PRNGKey(0))
-    params = calibrate_weight_scales(params, default_bits_fn(cfg, policy))
-    deployed = deploy_params(params, cfg, segments)
-    n_bytes = sum(x.size * x.dtype.itemsize
-                  for x in jax.tree.leaves(deployed))
-    n_fp = sum(x.size * 4 for x in jax.tree.leaves(params))
-    print(f"deployed weights: {n_bytes/1e6:.2f}MB vs fp32 {n_fp/1e6:.2f}MB "
-          f"({n_fp/n_bytes:.1f}x reduction)")
-
-    # kv_bits=8 stores the KV cache as int8 codes + per-(token, head)
-    # scales (DESIGN.md §8) — pass 4 for packed int4 nibbles, 16 for fp rows
-    eng = ServingEngine(deployed, cfg, segments, slots=4, max_len=128,
-                        kv_bits=8)
-    rng = np.random.default_rng(0)
-    t0 = time.time()
-    for i in range(12):
+def _burst(eng, cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    for _ in range(n):
         plen = int(rng.integers(4, 16))
         eng.submit(Request(prompt=rng.integers(1, cfg.vocab_size, plen)
                            .astype(np.int32), max_new_tokens=8))
     steps = eng.run_until_drained()
+    return steps, {r.rid: r.out.tolist() for r in eng.done}
+
+
+def main(quick: bool = False):
+    cfg = reduced(get_config("qwen2.5-32b"))
+    n = cfg.num_layers
+    n_requests = 4 if quick else 12
+    policy = QuantPolicy(num_layers=n, mode="int", last_k_int4=n // 2)
+    # kv_bits=8 stores the KV cache as int8 codes + per-(token, head)
+    # scales (DESIGN.md §8) — 4 packs int4 nibbles, 16 keeps fp rows
+    plan = ExecutionPlan.build(cfg, policy, kv_bits=8)
+
+    params = api.init_model(cfg, jax.random.PRNGKey(0))
+    model = deploy(params, plan)
+    n_bytes = sum(x.size * x.dtype.itemsize
+                  for x in jax.tree.leaves(model.params))
+    n_fp = sum(x.size * 4 for x in jax.tree.leaves(params))
+    print(f"deployed weights: {n_bytes/1e6:.2f}MB vs fp32 {n_fp/1e6:.2f}MB "
+          f"({n_fp/n_bytes:.1f}x reduction)")
+
+    # serve the in-memory model, then the saved+reloaded artifact: identical
+    eng = ServingEngine(model, slots=4, max_len=128)
+    t0 = time.time()
+    steps, mem_streams = _burst(eng, cfg, n_requests)
     dt = time.time() - t0
-    toks = sum(len(r.out) for r in eng.done)
-    print(f"served {len(eng.done)} requests / {toks} tokens in {steps} "
+    toks = sum(len(v) for v in mem_streams.values())
+    print(f"served {len(mem_streams)} requests / {toks} tokens in {steps} "
           f"engine steps, {dt:.2f}s ({toks/dt:.1f} tok/s on CPU)")
     print("metrics:", eng.metrics.report())
-    print("sample output:", eng.done[0].out.tolist())
+
+    with tempfile.TemporaryDirectory() as td:
+        loaded = DeployedModel.load(model.save(f"{td}/artifact"))
+    eng2 = loaded.engine(slots=4, max_len=128)
+    _, art_streams = _burst(eng2, cfg, n_requests)
+    assert art_streams == mem_streams, "artifact streams diverged!"
+    print(f"artifact round trip: {len(art_streams)} requests byte-identical")
+    print("sample output:", art_streams[0])
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke mode: smaller burst")
+    main(quick=ap.parse_args().quick)

@@ -44,6 +44,85 @@ def _unflatten(tree_like, arrays: dict[str, np.ndarray]):
     return jax.tree_util.tree_unflatten(flat[1], leaves)
 
 
+# --------------------------------------------------------------- artifacts
+
+def _nest(arrays: dict[str, np.ndarray]):
+    """'/'-joined flat keys → nested tree; integer-keyed levels (list indices
+    from tree_flatten_with_path's SequenceKey) become lists.
+
+    Unlike ``_unflatten`` this needs NO template tree — the deployed-int
+    parameter structure (per-segment stacks, packed-code leaves) is rebuilt
+    from the keys alone, so an artifact loads without first constructing a
+    model (DESIGN.md §9)."""
+    root: dict = {}
+    for key, arr in arrays.items():
+        parts = key.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = arr
+
+    def listify(node):
+        if not isinstance(node, dict):
+            return node
+        if node and all(k.isdigit() for k in node):
+            idx = sorted(int(k) for k in node)
+            if idx == list(range(len(node))):
+                return [listify(node[str(i)]) for i in idx]
+        return {k: listify(v) for k, v in node.items()}
+    return listify(root)
+
+
+def save_artifact(path: str, tree: Any, meta: dict) -> str:
+    """Write a self-describing artifact directory: ``arrays.npz``
+    (flattened leaves) + ``ARTIFACT.json`` (meta). Same temp-dir +
+    os.rename discipline as checkpoint saves — a crash mid-write never
+    publishes a partial artifact. Overwrites move the previous artifact
+    aside BEFORE the new one is published (and restore it if the publish
+    rename fails), so an existing artifact is never destroyed by a failed
+    save; a crash inside the two-rename swap window leaves the previous
+    payload recoverable under ``.old_artifact_*``."""
+    path = os.path.abspath(path)
+    parent = os.path.dirname(path) or "."
+    os.makedirs(parent, exist_ok=True)
+    if os.path.exists(path) and not os.path.isdir(path):
+        raise ValueError(f"{path} exists and is not an artifact directory")
+    tmp = tempfile.mkdtemp(dir=parent, prefix=".tmp_artifact_")
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"), **_flatten(tree))
+        with open(os.path.join(tmp, "ARTIFACT.json"), "w") as f:
+            json.dump({**meta, "time": time.time()}, f, indent=2,
+                      sort_keys=True)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    backup = None
+    if os.path.isdir(path):
+        backup = tempfile.mkdtemp(dir=parent, prefix=".old_artifact_")
+        os.rename(path, os.path.join(backup, "prev"))
+    try:
+        os.rename(tmp, path)                            # atomic publish
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        if backup is not None:                          # restore the old one
+            os.rename(os.path.join(backup, "prev"), path)
+        raise
+    if backup is not None:
+        shutil.rmtree(backup, ignore_errors=True)
+    return path
+
+
+def load_artifact(path: str) -> tuple[Any, dict]:
+    """(tree, meta) from :func:`save_artifact`'s layout. Leaves come back as
+    numpy arrays with their saved dtypes (packed int codes stay packed)."""
+    with open(os.path.join(path, "ARTIFACT.json")) as f:
+        meta = json.load(f)
+    with np.load(os.path.join(path, "arrays.npz"),
+                 allow_pickle=False) as z:
+        arrays = dict(z)
+    return _nest(arrays), meta
+
+
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3, host_index: int = 0):
         self.dir = directory

@@ -81,6 +81,18 @@ class ModelConfig:
     def replace(self, **kw) -> "ModelConfig":
         return dataclasses.replace(self, **kw)
 
+    @classmethod
+    def from_dict(cls, d: dict) -> "ModelConfig":
+        """Inverse of ``dataclasses.asdict`` after a JSON round trip (the
+        DeployedModel artifact meta — DESIGN.md §9): JSON turns the
+        ``dp_axes`` tuple into a list. Unknown keys are dropped so
+        artifacts written by a NEWER build (which may add cfg fields
+        without bumping the artifact version) still load."""
+        known = {f.name for f in dataclasses.fields(cls)}
+        d = {k: v for k, v in d.items() if k in known}
+        d["dp_axes"] = tuple(d.get("dp_axes", ("data",)))
+        return cls(**d)
+
 
 @dataclasses.dataclass(frozen=True)
 class ShapeSpec:

@@ -75,6 +75,17 @@ class QuantPolicy:
             [self.act_bits(l) or 0 for l in range(self.num_layers)], dtype=np.int32
         )
 
+    @classmethod
+    def from_dict(cls, d: dict) -> "QuantPolicy":
+        """Inverse of ``dataclasses.asdict`` after a JSON round trip (the
+        DeployedModel artifact meta — DESIGN.md §9). Unknown keys are
+        dropped so artifacts from a newer build still load."""
+        known = {f.name for f in dataclasses.fields(cls)}
+        d = {k: v for k, v in d.items() if k in known}
+        if d.get("int4_layers") is not None:
+            d["int4_layers"] = tuple(d["int4_layers"])
+        return cls(**d)
+
     def describe(self) -> str:
         i4 = [l for l in range(self.num_layers) if self.weight_bits(l) == 4]
         return (

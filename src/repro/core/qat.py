@@ -206,6 +206,9 @@ def _quantize_stack(tree, w_bits: int):
 def deploy_params(params, cfg: ModelConfig, segments) -> dict:
     """QAT params -> deployed int params (per-segment layer stacks).
 
+    Low-level packer: ``repro.deploy.deploy(params, plan)`` wraps this into
+    the saveable DeployedModel artifact (DESIGN.md §9).
+
     Dense/MoE/BERT/VLM: params['layers'] becomes a LIST of per-segment stacks.
     xlstm/hybrid: group stacks quantized per segment similarly; shared block
     (hybrid) quantized at the last segment's bits.

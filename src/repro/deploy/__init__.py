@@ -1,0 +1,13 @@
+"""Deployment subsystem (DESIGN.md §9): plans + artifacts.
+
+* ``ExecutionPlan`` — the resolved, validated execution recipe (segments /
+  kernel selection / KV precision / prefill mode / decode dtype), built once
+  and consumed by ``models.api.forward`` and ``serving.ServingEngine``.
+* ``DeployedModel`` — the serving artifact: packed int4/int8 weights + scales
+  bound to their plan, with atomic ``save``/``load`` so serve runs never
+  touch fp weights or recalibrate.
+"""
+from .artifact import DeployedModel, deploy
+from .plan import ExecutionPlan
+
+__all__ = ["DeployedModel", "ExecutionPlan", "deploy"]

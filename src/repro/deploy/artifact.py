@@ -1,0 +1,101 @@
+"""DeployedModel: the self-contained serving artifact (DESIGN.md §9).
+
+MKQ-BERT's headline result is *deployed* int4 inference — so deployment is an
+artifact, not a script that re-initializes and re-calibrates on every serve
+run. ``deploy(params, plan)`` packs the int4/int8 weight codes + scales ONCE;
+``DeployedModel.save/load`` round-trip the packed tree and the plan through
+``checkpoint/manager.py``'s atomic artifact writer, so
+
+    python -m repro.launch.serve --artifact <dir>
+
+serves with no fp weights in memory and no recalibration, byte-identical to
+serving the in-memory model.
+
+Layout:  <dir>/ARTIFACT.json   (format+version, cfg, policy, plan build args)
+         <dir>/arrays.npz      (flattened deployed-int leaves; '/'-joined
+                                tree paths as keys, list indices numeric)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from ..checkpoint import manager as ckpt
+from ..core import qat
+from .plan import ExecutionPlan, plan_from_meta, plan_to_meta
+
+__all__ = ["DeployedModel", "deploy", "ARTIFACT_FORMAT", "ARTIFACT_VERSION"]
+
+ARTIFACT_FORMAT = "mkq-deployed-model"
+ARTIFACT_VERSION = 1
+
+
+def deploy(params, plan: ExecutionPlan, calib_batches: Optional[list] = None,
+           *, recalibrate: bool = True) -> "DeployedModel":
+    """fp params → packed int artifact under ``plan``.
+
+    params         fp parameter tree (QAT-trained or freshly calibrated).
+    calib_batches  optional list of ``{'tokens': ...}`` batches: runs
+                   activation-scale calibration (percentile-of-|input|,
+                   paper §3.1) through an fp forward before packing.
+    recalibrate    recompute weight scales abs-max/qmax (paper §3.1). Pass
+                   False for QAT params whose ``s_w`` were LEARNED — LSQ
+                   scales must survive into deployment for train==deploy
+                   parity (DESIGN.md §6).
+    """
+    if not plan.deployed:
+        raise ValueError(
+            "deploy() needs a plan built from a mode='int' QuantPolicy; "
+            f"got policy={plan.policy!r}")
+    cfg = plan.cfg
+    if recalibrate:
+        params = qat.calibrate_weight_scales(
+            params, qat.default_bits_fn(cfg, plan.policy))
+    if calib_batches:
+        import jax.numpy as jnp
+
+        from ..models import api
+        fp_plan = ExecutionPlan.build(cfg, None, backend="reference",
+                                      kv_bits=16,
+                                      prefill_mode=plan.prefill_mode,
+                                      decode_dtype=plan.decode_dtype)
+        fwd = lambda p, b: api.forward(p, fp_plan,
+                                       tokens=jnp.asarray(b["tokens"]))[0]
+        params = qat.calibrate_act_scales(params, cfg, plan.policy, fwd,
+                                          calib_batches)
+    params_int = qat.deploy_params(params, cfg, plan.segments)
+    return DeployedModel(plan=plan, params=params_int)
+
+
+@dataclasses.dataclass
+class DeployedModel:
+    """Packed int4/int8 weights + scales bound to their ExecutionPlan."""
+
+    plan: ExecutionPlan
+    params: dict          # deployed-int tree (per-segment layer stacks)
+
+    # ------------------------------------------------------------- persist
+    def save(self, path: str) -> str:
+        meta = {"format": ARTIFACT_FORMAT, "version": ARTIFACT_VERSION,
+                **plan_to_meta(self.plan)}
+        return ckpt.save_artifact(path, self.params, meta)
+
+    @classmethod
+    def load(cls, path: str) -> "DeployedModel":
+        params, meta = ckpt.load_artifact(path)
+        if meta.get("format") != ARTIFACT_FORMAT:
+            raise ValueError(f"{path}: not a {ARTIFACT_FORMAT} artifact "
+                             f"(format={meta.get('format')!r})")
+        if meta.get("version", 0) > ARTIFACT_VERSION:
+            raise ValueError(
+                f"{path}: artifact version {meta['version']} is newer than "
+                f"this build understands ({ARTIFACT_VERSION})")
+        return cls(plan=plan_from_meta(meta), params=params)
+
+    # ------------------------------------------------------------- serve
+    def engine(self, *, slots: int = 8, max_len: int = 512, metrics=None):
+        """A ServingEngine over this artifact (lazy import: keeps the
+        artifact layer usable without pulling the serving stack)."""
+        from ..serving.engine import ServingEngine
+        return ServingEngine(self, slots=slots, max_len=max_len,
+                             metrics=metrics)

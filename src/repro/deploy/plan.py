@@ -1,0 +1,218 @@
+"""ExecutionPlan: the resolved, validated execution recipe (DESIGN.md §9).
+
+The serving stack used to thread a loose pile of flags — ``use_pallas``,
+``fuse_epilogue``, ``kv_bits``, ``prefill_mode``, a decode dtype — through
+``segments_for`` → ``forward`` → ``ServingEngine``, with every layer
+re-validating (or forgetting to validate) the combinations. An
+``ExecutionPlan`` is built ONCE:
+
+    plan = ExecutionPlan.build(cfg, policy, backend="pallas", kv_bits=8)
+
+and resolves everything up front: the per-segment ``QuantSpec`` list (kernel
+selection included), the prefill mode for the config's family, the KV-cache
+precision and the decode dtype. It is the single argument
+``repro.models.api.forward`` and ``repro.serving.ServingEngine`` consume, and
+the policy half of a saved :class:`repro.deploy.DeployedModel` artifact.
+
+Validation lives here — ``api.decode_state`` and the engine no longer carry
+their own copies of the family-compatibility checks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..core.policy import QuantPolicy
+from ..models.layers import QuantSpec
+
+__all__ = ["ExecutionPlan", "resolve_segments", "validate_cache_layout",
+           "TOKEN_ONLY_FAMILIES", "BACKENDS"]
+
+#: Families without a {'k','v','len'} decode cache: no chunked prefill, no
+#: slot table, no quantized KV — they keep the fp recurrent/decode state.
+TOKEN_ONLY_FAMILIES = ("xlstm", "hybrid", "encdec")
+
+BACKENDS = ("reference", "pallas")
+
+_DECODE_DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}
+
+
+def validate_cache_layout(cfg: ModelConfig, *, per_slot_len: bool = False,
+                          kv_bits: int = 16) -> None:
+    """Family-compatibility of the decode-cache layout (single source of
+    truth; ``api.decode_state`` defers here)."""
+    if kv_bits not in (16, 8, 4):
+        raise ValueError(f"kv_bits must be 16, 8 or 4, got {kv_bits}")
+    if cfg.family in TOKEN_ONLY_FAMILIES and (per_slot_len or kv_bits != 16):
+        raise ValueError(
+            "per_slot_len/kv_bits: transformer-family caches only "
+            f"({cfg.family} keeps the fp decode state)")
+
+
+def resolve_segments(cfg: ModelConfig, policy: Optional[QuantPolicy],
+                     use_pallas: bool = False, fuse_epilogue: bool = False
+                     ) -> list[tuple[int, int, QuantSpec]]:
+    """Policy → contiguous (start, end, QuantSpec) runs for ``cfg``'s family.
+
+    The resolver behind :meth:`ExecutionPlan.build`; the legacy
+    ``api.segments_for`` shim also lands here.
+    """
+    from ..models import hybrid, transformer
+    if policy is None:
+        return [(0, _segment_units(cfg), QuantSpec())]
+    if cfg.family in ("xlstm", "hybrid"):
+        per = cfg.slstm_every if cfg.family == "xlstm" else cfg.attn_every
+        return hybrid.group_segments(policy, cfg.num_layers // per,
+                                     use_pallas)
+    if cfg.family == "encdec":
+        # segments over decoder layers
+        if policy.num_layers != cfg.dec_layers:
+            raise ValueError(
+                f"encdec policy covers decoder layers ({cfg.dec_layers}), "
+                f"got num_layers={policy.num_layers}")
+    return transformer.segments_from_policy(policy, use_pallas, fuse_epilogue)
+
+
+def _segment_units(cfg: ModelConfig) -> int:
+    if cfg.family == "xlstm":
+        return cfg.num_layers // cfg.slstm_every
+    if cfg.family == "hybrid":
+        return cfg.num_layers // cfg.attn_every
+    if cfg.family == "encdec":
+        return cfg.dec_layers
+    return cfg.num_layers
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """Everything the forward/serving path needs, resolved once.
+
+    Use :meth:`build` — the constructor takes already-resolved fields and
+    performs no validation.
+    """
+
+    cfg: ModelConfig
+    policy: Optional[QuantPolicy]
+    backend: str                 # 'reference' | 'pallas'
+    kv_bits: int                 # 16 (fp rows) | 8 | 4 (packed, DESIGN.md §8)
+    prefill_mode: str            # 'chunked' | 'token' (resolved, never 'auto')
+    decode_dtype: str            # 'float32' | 'bfloat16'
+    fuse_epilogue: bool
+    segments: tuple              # ((start, end, QuantSpec), ...)
+
+    # ------------------------------------------------------------- build
+    @classmethod
+    def build(cls, cfg: ModelConfig, policy: Optional[QuantPolicy] = None, *,
+              backend: str = "reference", kv_bits: Optional[int] = None,
+              prefill_mode: str = "auto", decode_dtype: str = "float32",
+              fuse_epilogue: Optional[bool] = None) -> "ExecutionPlan":
+        """Resolve + validate a plan.
+
+        backend       'pallas' routes int matmuls (and quantized-KV decode
+                      attention) through the Pallas kernels; 'reference' is
+                      the jnp int path.
+        kv_bits       None follows ``cfg.kv_bits``.
+        prefill_mode  'auto' resolves per family: 'chunked' for transformer
+                      KV-cache families, 'token' (seed semantics) otherwise.
+        decode_dtype  the ONE fp dtype of the serving decode state — engine,
+                      slot cache and prefill all inherit it from the plan.
+        fuse_epilogue None fuses whenever the backend is 'pallas' (fusing is
+                      statically gated to deployed int4 + gelu/relu FFNs in
+                      ``models.transformer.ffn_apply``, so this is safe for
+                      every segment mix); pass an explicit bool to override.
+        """
+        if backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}, "
+                             f"got {backend!r}")
+        if decode_dtype not in _DECODE_DTYPES:
+            raise ValueError(f"decode_dtype must be one of "
+                             f"{sorted(_DECODE_DTYPES)}, got {decode_dtype!r}")
+        kv_bits = cfg.kv_bits if kv_bits is None else kv_bits
+
+        if prefill_mode == "auto":
+            prefill_mode = ("token" if cfg.family in TOKEN_ONLY_FAMILIES
+                            else "chunked")
+        if prefill_mode not in ("chunked", "token"):
+            raise ValueError(f"prefill_mode must be 'auto', 'chunked' or "
+                             f"'token', got {prefill_mode!r}")
+        if prefill_mode == "chunked" and cfg.family in TOKEN_ONLY_FAMILIES:
+            raise ValueError(
+                f"{cfg.family}: no KV slot cache; use prefill_mode='token'")
+        validate_cache_layout(cfg, kv_bits=kv_bits)
+        if prefill_mode == "token" and kv_bits != 16:
+            raise ValueError(
+                "kv_bits < 16 needs the chunked slot cache; token-mode "
+                "prefill keeps the fp decode state")
+
+        use_pallas = backend == "pallas"
+        if fuse_epilogue is None:
+            fuse_epilogue = use_pallas
+        segments = resolve_segments(cfg, policy, use_pallas, fuse_epilogue)
+        return cls(cfg=cfg, policy=policy, backend=backend, kv_bits=kv_bits,
+                   prefill_mode=prefill_mode, decode_dtype=decode_dtype,
+                   fuse_epilogue=fuse_epilogue, segments=tuple(segments))
+
+    # ------------------------------------------------------------ queries
+    @property
+    def use_pallas(self) -> bool:
+        return self.backend == "pallas"
+
+    @property
+    def jnp_dtype(self):
+        return _DECODE_DTYPES[self.decode_dtype]
+
+    @property
+    def deployed(self) -> bool:
+        """True when the segments carry deployed-int QuantSpecs."""
+        return self.policy is not None and self.policy.mode == "int"
+
+    def decode_state(self, batch: int, max_len: int, *,
+                     as_specs: bool = False, per_slot_len: bool = False,
+                     kv_bits: Optional[int] = None):
+        """Allocate (or spec) the decode state with the plan's dtype/kv_bits.
+
+        ``kv_bits`` override exists for the engine's fp batch-1 prefill cache
+        (prefill always runs at full precision; quantization happens on slot
+        insert — DESIGN.md §8).
+        """
+        from ..models import api
+        return api.decode_state(
+            self.cfg, batch, max_len, dtype=self.jnp_dtype,
+            as_specs=as_specs, per_slot_len=per_slot_len,
+            kv_bits=self.kv_bits if kv_bits is None else kv_bits)
+
+    def build_kwargs(self) -> dict:
+        """The exact ``build`` inputs needed to reconstruct this plan (the
+        artifact meta stores these — DESIGN.md §9)."""
+        return {"backend": self.backend, "kv_bits": self.kv_bits,
+                "prefill_mode": self.prefill_mode,
+                "decode_dtype": self.decode_dtype,
+                "fuse_epilogue": self.fuse_epilogue}
+
+    def describe(self) -> str:
+        segs = ", ".join(f"[{s}:{e}) w{sp.w_bits or 'fp'}/a{sp.a_bits or 'fp'}"
+                         for s, e, sp in self.segments)
+        return (f"ExecutionPlan({self.cfg.name}, backend={self.backend}, "
+                f"kv_bits={self.kv_bits}, prefill={self.prefill_mode}, "
+                f"dtype={self.decode_dtype}, segments=({segs}))")
+
+
+def plan_to_meta(plan: ExecutionPlan) -> dict:
+    """JSON-serializable description from which ``plan_from_meta`` rebuilds
+    an identical plan (segments re-resolved, not stored)."""
+    return {
+        "cfg": dataclasses.asdict(plan.cfg),
+        "policy": (None if plan.policy is None
+                   else dataclasses.asdict(plan.policy)),
+        "build": plan.build_kwargs(),
+    }
+
+
+def plan_from_meta(meta: dict) -> ExecutionPlan:
+    cfg = ModelConfig.from_dict(meta["cfg"])
+    policy = (None if meta["policy"] is None
+              else QuantPolicy.from_dict(meta["policy"]))
+    return ExecutionPlan.build(cfg, policy, **meta["build"])

@@ -1,8 +1,17 @@
-"""Thin CLI shim over the serving subsystem (repro/serving — DESIGN.md §7).
+"""Thin CLI shim over the serving subsystem (repro/serving — DESIGN.md §7/§9).
 
-The engine itself lives in ``repro.serving``: scheduler (queue + slot table),
-kv_cache (per-slot cursors), engine (prefill/decode step loop), metrics
-(latency/throughput). ``Request`` and ``ServingEngine`` stay importable from
+Three entry modes:
+
+* default            build an ExecutionPlan, deploy an int model in-process,
+                     serve a synthetic burst (smoke/demo path);
+* ``--export DIR``   additionally save the DeployedModel artifact to DIR;
+* ``--artifact DIR`` load a previously exported artifact and serve it —
+                     no fp weights are initialized and nothing recalibrates;
+                     token streams are byte-identical to the in-memory run
+                     that exported it.
+
+The engine itself lives in ``repro.serving``; plans/artifacts in
+``repro.deploy``. ``Request`` and ``ServingEngine`` stay importable from
 here for backward compatibility.
 """
 from __future__ import annotations
@@ -10,36 +19,19 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
 import numpy as np
 
 from ..serving import Request, ServingEngine  # noqa: F401  (compat re-export)
 
 
-def main(argv=None):
+def _build_model(args):
+    """ExecutionPlan + in-process deployment (the non-artifact path)."""
+    import jax
+
     from ..configs import get_config, reduced
     from ..core.policy import QuantPolicy
-    from ..core.qat import calibrate_weight_scales, default_bits_fn, \
-        deploy_params
+    from ..deploy import ExecutionPlan, deploy
     from ..models import api
-
-    p = argparse.ArgumentParser()
-    p.add_argument("--arch", default="stablelm-3b")
-    p.add_argument("--reduced", action="store_true")
-    p.add_argument("--requests", type=int, default=16)
-    p.add_argument("--slots", type=int, default=4)
-    p.add_argument("--int4-last-k", type=int, default=-1)
-    p.add_argument("--prefill-mode", default="auto",
-                   choices=["auto", "chunked", "token"])
-    p.add_argument("--use-pallas", action="store_true",
-                   help="route matmuls through the int4/int8 Pallas kernels "
-                        "(fused decode epilogue; interpret mode off-TPU)")
-    p.add_argument("--kv-bits", type=int, default=16, choices=[16, 8, 4],
-                   help="serving KV-cache precision (DESIGN.md §8): 16 keeps "
-                        "fp rows; 8/4 store packed codes + per-(token, head) "
-                        "scales and decode via the fused Pallas "
-                        "decode-attention kernel when --use-pallas is set")
-    args = p.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -47,16 +39,59 @@ def main(argv=None):
     n_units = cfg.dec_layers if cfg.family == "encdec" else cfg.num_layers
     k4 = args.int4_last_k if args.int4_last_k >= 0 else n_units // 2
     policy = QuantPolicy(num_layers=n_units, mode="int", last_k_int4=k4)
-    segments = api.segments_for(cfg, policy, use_pallas=args.use_pallas,
-                                fuse_epilogue=args.use_pallas)
-
+    plan = ExecutionPlan.build(cfg, policy, backend=args.backend,
+                               kv_bits=args.kv_bits,
+                               prefill_mode=args.prefill_mode)
     params = api.init_model(cfg, jax.random.PRNGKey(0))
-    params = calibrate_weight_scales(params, default_bits_fn(cfg, policy))
-    params_int = deploy_params(params, cfg, segments)
+    return deploy(params, plan)
 
-    eng = ServingEngine(params_int, cfg, segments, slots=args.slots,
-                        max_len=128, prefill_mode=args.prefill_mode,
-                        kv_bits=args.kv_bits)
+
+def main(argv=None):
+    from ..deploy import DeployedModel
+
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="stablelm-3b")
+    p.add_argument("--reduced", action="store_true")
+    p.add_argument("--requests", type=int, default=16)
+    p.add_argument("--slots", type=int, default=4)
+    p.add_argument("--max-len", type=int, default=128)
+    p.add_argument("--int4-last-k", type=int, default=-1)
+    p.add_argument("--prefill-mode", default="auto",
+                   choices=["auto", "chunked", "token"])
+    p.add_argument("--backend", default="reference",
+                   choices=["reference", "pallas"],
+                   help="'pallas' routes matmuls through the int4/int8 "
+                        "Pallas kernels (fused decode epilogue; interpret "
+                        "mode off-TPU)")
+    p.add_argument("--kv-bits", type=int, default=16, choices=[16, 8, 4],
+                   help="serving KV-cache precision (DESIGN.md §8): 16 keeps "
+                        "fp rows; 8/4 store packed codes + per-(token, head) "
+                        "scales and decode via the fused Pallas "
+                        "decode-attention kernel with --backend pallas")
+    p.add_argument("--artifact", default=None, metavar="DIR",
+                   help="serve a saved DeployedModel (repro.deploy) — no fp "
+                        "weights, no recalibration; plan/arch flags come "
+                        "from the artifact")
+    p.add_argument("--export", default=None, metavar="DIR",
+                   help="save the deployed model as an artifact before "
+                        "serving (reload later with --artifact DIR)")
+    args = p.parse_args(argv)
+    if args.artifact and args.export:
+        p.error("--export builds a fresh model and cannot be combined with "
+                "--artifact (which serves an existing one)")
+
+    if args.artifact:
+        model = DeployedModel.load(args.artifact)
+        print(f"[serve] loaded artifact {args.artifact}: "
+              f"{model.plan.describe()}")
+    else:
+        model = _build_model(args)
+        if args.export:
+            path = model.save(args.export)
+            print(f"[serve] exported artifact to {path}")
+
+    cfg = model.plan.cfg
+    eng = ServingEngine(model, slots=args.slots, max_len=args.max_len)
     rng = np.random.default_rng(0)
     t0 = time.time()
     for _ in range(args.requests):

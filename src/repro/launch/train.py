@@ -22,15 +22,19 @@ import jax
 import jax.numpy as jnp
 
 
-def build_train_step(cfg, segments, hparams, teacher=None, teacher_cfg=None,
-                     teacher_segments=None):
-    """Returns train_step(params, opt, batch) -> (params, opt, metrics)."""
+def build_train_step(plan, hparams, teacher=None, teacher_plan=None):
+    """Returns train_step(params, opt, batch) -> (params, opt, metrics).
+
+    ``plan``/``teacher_plan`` are ``repro.deploy.ExecutionPlan``s (student
+    QAT plan and fp teacher plan)."""
     from ..core.distill import (combine_losses, hidden_state_loss,
                                 minilm_losses, output_loss)
     from ..models import api
     from ..models.transformer import lm_loss
     from ..optim import adam_update, linear_warmup_decay
 
+    cfg = plan.cfg
+    teacher_cfg = teacher_plan.cfg if teacher_plan is not None else None
     sched = linear_warmup_decay(hparams.total_steps, hparams.warmup_frac)
     lr_by_group = {"weights": hparams.lr_weights,
                    "act_scale": hparams.lr_act_scale,
@@ -39,13 +43,12 @@ def build_train_step(cfg, segments, hparams, teacher=None, teacher_cfg=None,
 
     def loss_fn(params, batch):
         inputs = {k: v for k, v in batch.items() if k != "labels"}
-        logits, _, taps_s, aux = api.forward(params, cfg, segments,
+        logits, _, taps_s, aux = api.forward(params, plan,
                                              want_taps=distill, **inputs)
         l_train = lm_loss(logits, batch["labels"]) + aux
         if not distill:
             return l_train, {"loss/train": l_train}
-        t_logits, _, taps_t, _ = api.forward(teacher, teacher_cfg,
-                                             teacher_segments,
+        t_logits, _, taps_t, _ = api.forward(teacher, teacher_plan,
                                              want_taps=True, **inputs)
         l_out = output_loss(logits, jax.lax.stop_gradient(t_logits))
         taps_t = jax.lax.stop_gradient(taps_t)
@@ -93,12 +96,13 @@ def run_training(cfg, policy, hparams, data_iter, *, ckpt_dir: str,
                  log_every: int = 10, max_steps=None, on_step=None):
     """The loop: resume -> step -> checkpoint; SIGTERM-safe."""
     from ..checkpoint import CheckpointManager
+    from ..deploy import ExecutionPlan
     from ..models import api
     from ..optim import adam_init
 
-    segments = api.segments_for(cfg, policy)
-    teacher_segments = (api.segments_for(teacher_cfg, None)
-                        if teacher_cfg is not None else None)
+    plan = ExecutionPlan.build(cfg, policy)
+    teacher_plan = (ExecutionPlan.build(teacher_cfg, None)
+                    if teacher_cfg is not None else None)
     params = api.init_model(cfg, jax.random.PRNGKey(0))
     opt = adam_init(params)
     mgr = CheckpointManager(ckpt_dir)
@@ -109,10 +113,9 @@ def run_training(cfg, policy, hparams, data_iter, *, ckpt_dir: str,
         print(f"[train] resumed from step {step0}", flush=True)
     step0 = step0 or 0
 
-    step_fn = jax.jit(build_train_step(cfg, segments, hparams,
+    step_fn = jax.jit(build_train_step(plan, hparams,
                                        teacher=distill_teacher,
-                                       teacher_cfg=teacher_cfg,
-                                       teacher_segments=teacher_segments))
+                                       teacher_plan=teacher_plan))
     stop = {"now": False}
 
     def _sigterm(signum, frame):  # checkpoint-and-exit on preemption

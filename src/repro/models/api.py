@@ -1,7 +1,11 @@
 """Family-dispatching model API: init / forward / decode-state for every arch.
 
-forward(...) -> (logits, new_state, taps, aux_loss) uniformly across families,
-so train/serve/dryrun drivers are architecture-agnostic.
+``forward(params, plan, ...) -> (logits, new_state, taps, aux_loss)``
+uniformly across families, so train/serve/dryrun drivers are
+architecture-agnostic. The ``plan`` is a ``repro.deploy.ExecutionPlan``
+(DESIGN.md §9) carrying the resolved cfg + segments; the legacy
+``forward(params, cfg, segments, ...)`` positional form is kept as a thin
+deprecation shim for existing tests and fp training call sites.
 """
 from __future__ import annotations
 
@@ -12,33 +16,32 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from ..core.policy import QuantPolicy
-from .layers import QuantSpec
+from .layers import QuantSpec  # noqa: F401  (re-export: segment spec type)
 from . import encdec, hybrid, transformer, xlstm
 
 
 def segments_for(cfg: ModelConfig, policy: Optional[QuantPolicy],
                  use_pallas: bool = False, fuse_epilogue: bool = False):
-    if policy is None:
-        n = _segment_units(cfg)
-        return [(0, n, QuantSpec())]
-    if cfg.family in ("xlstm", "hybrid"):
-        per = cfg.slstm_every if cfg.family == "xlstm" else cfg.attn_every
-        return hybrid.group_segments(policy, cfg.num_layers // per, use_pallas)
-    if cfg.family == "encdec":
-        # segments over decoder layers
-        assert policy.num_layers == cfg.dec_layers, \
-            f"encdec policy covers decoder layers ({cfg.dec_layers})"
-    return transformer.segments_from_policy(policy, use_pallas, fuse_epilogue)
+    """DEPRECATED shim — build a ``repro.deploy.ExecutionPlan`` instead.
+
+    The kernel-selection booleans live on the plan now
+    (``backend='pallas'`` / ``fuse_epilogue``); this shim only remains so
+    policy→segment resolution stays importable from the models layer and
+    plan-equivalence tests can compare against the legacy combinations.
+    """
+    from ..deploy.plan import resolve_segments
+    return resolve_segments(cfg, policy, use_pallas, fuse_epilogue)
 
 
-def _segment_units(cfg: ModelConfig) -> int:
-    if cfg.family == "xlstm":
-        return cfg.num_layers // cfg.slstm_every
-    if cfg.family == "hybrid":
-        return cfg.num_layers // cfg.attn_every
-    if cfg.family == "encdec":
-        return cfg.dec_layers
-    return cfg.num_layers
+def _unpack_plan(plan, segments):
+    """(plan) or legacy (cfg, segments) → (cfg, segments)."""
+    if isinstance(plan, ModelConfig):
+        if segments is None:
+            raise TypeError(
+                "forward(params, cfg, segments) needs segments; pass an "
+                "ExecutionPlan instead (repro.deploy.ExecutionPlan.build)")
+        return plan, segments
+    return plan.cfg, plan.segments
 
 
 def init_model(cfg: ModelConfig, key) -> dict:
@@ -51,9 +54,14 @@ def init_model(cfg: ModelConfig, key) -> dict:
     return transformer.init_lm(cfg, key)
 
 
-def forward(params, cfg: ModelConfig, segments, *, state=None,
+def forward(params, plan, segments=None, *, state=None,
             want_taps: bool = False, **inputs):
-    """inputs: tokens / src_embeds / patch_embeds / patch_mask / enc_out."""
+    """inputs: tokens / src_embeds / patch_embeds / patch_mask / enc_out.
+
+    ``plan`` is an ``ExecutionPlan``; the legacy ``(cfg, segments)`` pair is
+    accepted as a deprecation shim.
+    """
+    cfg, segments = _unpack_plan(plan, segments)
     if cfg.family == "xlstm":
         return xlstm.xlstm_forward(params, cfg, segments, states=state,
                                    want_taps=want_taps, **inputs)
@@ -78,22 +86,20 @@ def decode_state(cfg: ModelConfig, batch: int, max_len: int,
     kv_bits 8/4 allocates the quantized packed cache layout (DESIGN.md §8)
     instead of fp K/V rows (transformer-family caches only); the default
     (None) follows ``cfg.kv_bits`` so the config knob means the same thing
-    to every caller."""
+    to every caller.
+
+    Serving callers should not pick the dtype here: build an
+    ``ExecutionPlan`` and use ``plan.decode_state(...)`` so engine, slot
+    cache and prefill all share the plan's ONE decode dtype.
+    """
+    from ..deploy.plan import validate_cache_layout
     kv_bits = cfg.kv_bits if kv_bits is None else kv_bits
+    validate_cache_layout(cfg, per_slot_len=per_slot_len, kv_bits=kv_bits)
     if cfg.family == "xlstm":
-        if per_slot_len or kv_bits != 16:
-            raise ValueError(
-                "per_slot_len/kv_bits: transformer-family caches only")
         return xlstm.xlstm_states(cfg, batch, as_specs=as_specs)
     if cfg.family == "hybrid":
-        if per_slot_len or kv_bits != 16:
-            raise ValueError(
-                "per_slot_len/kv_bits: transformer-family caches only")
         return hybrid.hybrid_states(cfg, batch, max_len, dtype, as_specs)
     if cfg.family == "encdec":
-        if per_slot_len or kv_bits != 16:
-            raise ValueError(
-                "per_slot_len/kv_bits: transformer-family caches only")
         L = cfg.dec_layers
         mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if as_specs else (
             lambda s, d: jnp.zeros(s, d))

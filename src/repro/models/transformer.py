@@ -29,7 +29,11 @@ from .layers import (QuantSpec, act_fn, init_linear, init_norm, layernorm,
 def segments_from_policy(policy: QuantPolicy, use_pallas: bool = False,
                          fuse_epilogue: bool = False
                          ) -> list[tuple[int, int, QuantSpec]]:
-    """Contiguous (start, end, QuantSpec) runs of equal bit-width."""
+    """Contiguous (start, end, QuantSpec) runs of equal bit-width.
+
+    Low-level resolver: callers should build a
+    ``repro.deploy.ExecutionPlan`` (DESIGN.md §9), which lands here with the
+    kernel-selection flags resolved from its backend."""
     segs: list[tuple[int, int, QuantSpec]] = []
     for l in range(policy.num_layers):
         wb, ab = policy.weight_bits(l) or 0, policy.act_bits(l) or 0

@@ -8,7 +8,10 @@ The deployment side of the paper, grown into a real package:
 * ``engine``     — prefill/decode-separated step loop over the deployed model
 * ``metrics``    — latency/throughput recorder (tokens/sec, p50/p99 steps)
 
-``launch/serve.py`` is a thin CLI shim over this package.
+``launch/serve.py`` is a thin CLI shim over this package. The engine
+consumes a ``repro.deploy`` DeployedModel (or raw params + ExecutionPlan) —
+segments, kernel selection, KV precision, prefill mode and decode dtype all
+come from the plan (DESIGN.md §9).
 """
 from .engine import ServingEngine
 from .kv_cache import SlotKVCache

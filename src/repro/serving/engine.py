@@ -1,6 +1,7 @@
 """Serving engine: prefill/decode-separated step loop (DESIGN.md §7).
 
-Two-phase execution over the deployed int4/int8 model:
+Two-phase execution over a deployed model (``repro.deploy.DeployedModel``, or
+a raw params tree plus its ``ExecutionPlan``):
 
 * **prefill** — a newly admitted request's whole prompt runs in ONE forward
   (batch 1, prompt padded to a power-of-two bucket to bound recompiles); the
@@ -9,13 +10,13 @@ Two-phase execution over the deployed int4/int8 model:
 * **decode** — one token per step for every occupied slot, batched across the
   slot table with per-slot cache cursors (kv_cache.SlotKVCache).
 
-This replaces the seed driver's token-at-a-time prompt feeding (prompt_len
-engine steps per request, each a full batched forward) with prompt_len tokens
-per prefill step — and isolates slots, which the seed's global cache cursor
-did not.
+Everything configuration-shaped — segments, kernel selection, KV precision,
+prefill mode, decode dtype — comes from the plan; the engine itself only owns
+slots, max_len and the step loop. Family compatibility was validated when the
+plan was built, so construction here cannot produce an inconsistent engine.
 
-Families without a {'k','v','len'} decode cache (xlstm, hybrid, encdec) fall
-back to ``prefill_mode='token'``: the seed semantics with a shared cursor.
+Families without a {'k','v','len'} decode cache (xlstm, hybrid, encdec) run
+``prefill_mode='token'``: the seed semantics with a shared cursor.
 """
 from __future__ import annotations
 
@@ -26,13 +27,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..configs.base import ModelConfig
+from ..deploy import DeployedModel, ExecutionPlan
 from ..models import api
 from .kv_cache import SlotKVCache
 from .metrics import ServeMetrics
 from .scheduler import Request, Scheduler
-
-_TOKEN_ONLY_FAMILIES = ("xlstm", "hybrid", "encdec")
 
 
 def _bucket_for(plen: int, max_len: int, min_bucket: int = 8) -> int:
@@ -43,43 +42,46 @@ def _bucket_for(plen: int, max_len: int, min_bucket: int = 8) -> int:
 
 
 class ServingEngine:
-    """Continuous-batching engine over the deployed quantized model."""
+    """Continuous-batching engine over the deployed quantized model.
 
-    def __init__(self, params_int, cfg: ModelConfig, segments, *,
-                 slots: int = 8, max_len: int = 512, dtype=jnp.float32,
-                 prefill_mode: str = "auto", kv_bits: Optional[int] = None,
+    ``model`` is a :class:`DeployedModel` (plan included), or a raw params
+    tree with ``plan`` passed explicitly.
+    """
+
+    def __init__(self, model, plan: Optional[ExecutionPlan] = None, *,
+                 slots: int = 8, max_len: int = 512,
                  metrics: Optional[ServeMetrics] = None):
-        self.cfg = cfg
-        self.segments = segments
-        self.params = params_int
+        if isinstance(model, DeployedModel):
+            if plan is not None and plan != model.plan:
+                raise ValueError(
+                    "pass either a DeployedModel (plan included) or raw "
+                    "params + plan, not a conflicting pair")
+            params, plan = model.params, model.plan
+        else:
+            params = model
+            if plan is None:
+                raise TypeError("raw params need an ExecutionPlan; build one "
+                                "with repro.deploy.ExecutionPlan.build")
+        self.plan = plan
+        self.cfg = cfg = plan.cfg
+        self.segments = segments = plan.segments
+        self.params = params
         self.slots = slots
         self.max_len = max_len
-        self.dtype = dtype
-        self.kv_bits = cfg.kv_bits if kv_bits is None else kv_bits
+        self.dtype = plan.jnp_dtype           # the ONE serving decode dtype
+        self.kv_bits = plan.kv_bits
+        self.prefill_mode = plan.prefill_mode
         self.scheduler = Scheduler(slots)
         self.metrics = metrics if metrics is not None else ServeMetrics()
         self.generated: list[list[int]] = [[] for _ in range(slots)]
 
-        if prefill_mode == "auto":
-            prefill_mode = ("token" if cfg.family in _TOKEN_ONLY_FAMILIES
-                            else "chunked")
-        if prefill_mode == "chunked" and cfg.family in _TOKEN_ONLY_FAMILIES:
-            raise ValueError(
-                f"{cfg.family}: no KV slot cache; use prefill_mode='token'")
-        if prefill_mode == "token" and self.kv_bits != 16:
-            raise ValueError(
-                "kv_bits < 16 needs the chunked slot cache; token-mode "
-                "families keep the fp decode state")
-        self.prefill_mode = prefill_mode
-
-        if prefill_mode == "chunked":
-            self.kv = SlotKVCache(cfg, slots, max_len, dtype=dtype,
-                                  kv_bits=self.kv_bits)
+        if self.prefill_mode == "chunked":
+            self.kv = SlotKVCache.from_plan(plan, slots, max_len)
             self.state = None
             self._prefill_fns: dict[int, callable] = {}
         else:
             self.kv = None
-            self.state = api.decode_state(cfg, slots, max_len, dtype=dtype)
+            self.state = plan.decode_state(slots, max_len)
             self.pos = np.zeros(slots, np.int32)   # per-slot prompt cursor
 
         def step(params, state, tokens):
@@ -91,6 +93,24 @@ class ServingEngine:
 
     # ------------------------------------------------------------------ API
     def submit(self, req: Request) -> Request:
+        """Validate + enqueue. Malformed requests are rejected HERE, for
+        both prefill modes — by decode time the bad prompt would have been
+        scattered into the cache (or indexed at [-1]) already."""
+        self.scheduler.assign_id(req)      # so rejections carry a real rid
+        plen = len(req.prompt)
+        if plen <= 0:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if plen + req.max_new_tokens > self.max_len and \
+                self.cfg.family != "xlstm":
+            # past max_len the cache writes clamp or drop silently — decode
+            # would keep emitting tokens that cannot see recent context.
+            # (xlstm state is recurrent: no positional cache to overflow.
+            # Token mode's shared cursor makes this necessary, not
+            # sufficient — inherited seed semantics.)
+            raise ValueError(
+                f"request {req.rid}: prompt ({plen}) + max_new_tokens "
+                f"({req.max_new_tokens}) exceeds engine max_len "
+                f"({self.max_len})")
         return self.scheduler.submit(req)
 
     @property
@@ -123,13 +143,12 @@ class ServingEngine:
         """Batch-1 full-prompt forward, compiled once per bucket size."""
         fn = self._prefill_fns.get(bucket)
         if fn is None:
-            cfg, segments, dtype = self.cfg, self.segments, self.dtype
+            cfg, segments, plan = self.cfg, self.segments, self.plan
 
             def pf(params, tokens):
                 # prefill always runs on the fp cache regardless of
-                # cfg.kv_bits; quantization happens on slot insert
-                st = api.decode_state(cfg, 1, bucket, dtype=dtype,
-                                      kv_bits=16)
+                # plan.kv_bits; quantization happens on slot insert
+                st = plan.decode_state(1, bucket, kv_bits=16)
                 logits, st2, _, _ = api.forward(
                     params, cfg, segments, state=st, tokens=tokens)
                 return logits, st2
@@ -139,15 +158,7 @@ class ServingEngine:
 
     def _prefill_into_slot(self, slot: int, req: Request) -> None:
         plen = len(req.prompt)
-        if plen <= 0:
-            raise ValueError(f"request {req.rid}: empty prompt")
-        if plen + req.max_new_tokens > self.max_len:
-            # past max_len the cache scatter drops writes silently — decode
-            # would keep emitting tokens that cannot see recent context
-            raise ValueError(
-                f"request {req.rid}: prompt ({plen}) + max_new_tokens "
-                f"({req.max_new_tokens}) exceeds engine max_len "
-                f"({self.max_len})")
+        assert plen > 0, f"request {req.rid}: empty prompt past submit()"
         bucket = _bucket_for(plen, self.max_len)
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :plen] = req.prompt
@@ -201,10 +212,8 @@ class ServingEngine:
             req = self.scheduler.active[s]
             if self.pos[s] < len(req.prompt):      # still feeding the prompt
                 toks[s, 0] = req.prompt[self.pos[s]]
-            elif self.generated[s]:
-                toks[s, 0] = self.generated[s][-1]
-            else:
-                toks[s, 0] = req.prompt[-1]
+            else:                                  # submit() bans empty
+                toks[s, 0] = self.generated[s][-1]  # prompts: always filled
         t0 = time.perf_counter()
         next_tok, self.state = self._step(self.params, self.state,
                                           jnp.asarray(toks))

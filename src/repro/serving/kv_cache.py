@@ -82,6 +82,14 @@ class SlotKVCache:
                                       per_slot_len=True,
                                       kv_bits=self.kv_bits)
 
+    @classmethod
+    def from_plan(cls, plan, slots: int, max_len: int) -> "SlotKVCache":
+        """Slot table with the plan's decode dtype and KV precision — the
+        engine allocates through here so the cache can never disagree with
+        the plan the prefill/decode steps were built from."""
+        return cls(plan.cfg, slots, max_len, dtype=plan.jnp_dtype,
+                   kv_bits=plan.kv_bits)
+
     @property
     def quantized(self) -> bool:
         return self.kv_bits in (8, 4)

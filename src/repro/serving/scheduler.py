@@ -35,10 +35,16 @@ class Scheduler:
         self._next_id = 0
 
     # ------------------------------------------------------------- lifecycle
-    def submit(self, req: Request) -> Request:
+    def assign_id(self, req: Request) -> Request:
+        """Give a request its rid without enqueueing it (the engine assigns
+        before validation so rejections reference a real request id)."""
         if req.rid < 0:
             req.rid = self._next_id
             self._next_id += 1
+        return req
+
+    def submit(self, req: Request) -> Request:
+        self.assign_id(req)
         self.queue.append(req)
         return req
 

@@ -1,0 +1,290 @@
+"""Deployment subsystem tests (DESIGN.md §9).
+
+Invariants:
+* ``ExecutionPlan.build`` reproduces EVERY legacy
+  ``segments_for(cfg, policy, use_pallas, fuse_epilogue)`` combination,
+  across families and policies (the shim and the plan can never drift);
+* invalid combinations (chunked prefill on token-only families, quantized KV
+  without the slot cache, bad backend/dtype names) fail at plan build, not
+  mid-serve;
+* the plan's decode dtype is THE serving dtype: engine state and slot cache
+  allocate with it, for both prefill modes;
+* empty prompts are rejected at ``ServingEngine.submit`` for both prefill
+  modes (regression: token mode used to crash on ``req.prompt[-1]``);
+* deploy → save → load → serve emits token streams byte-identical to serving
+  the in-memory DeployedModel, for int8 and int4 weight/KV variants, with no
+  fp weights in the artifact and no recalibration on load.
+"""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.policy import QuantPolicy
+from repro.deploy import DeployedModel, ExecutionPlan, deploy
+from repro.deploy.plan import plan_from_meta, plan_to_meta
+from repro.models import api
+from repro.serving import Request, ServingEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _units(cfg):
+    return cfg.dec_layers if cfg.family == "encdec" else cfg.num_layers
+
+
+# ------------------------------------------------------------ plan resolution
+
+def test_segment_resolution_pinned():
+    """Frozen expected segments for representative policies. The shim-vs-plan
+    comparison below shares one resolver on both sides, so THIS fixture is
+    what catches a resolver regression."""
+    from repro.models.layers import QuantSpec
+    cfg = reduced(get_config("stablelm-3b"))            # 4 layers
+    pol = QuantPolicy(num_layers=4, mode="int", last_k_int4=2)
+    plan = ExecutionPlan.build(cfg, pol, backend="pallas")  # fuse auto-on
+    kw = dict(mode="int", use_pallas=True, fuse_epilogue=True)
+    assert plan.segments == ((0, 2, QuantSpec(w_bits=8, a_bits=8, **kw)),
+                             (2, 4, QuantSpec(w_bits=4, a_bits=4, **kw)))
+    assert ExecutionPlan.build(cfg, None).segments == ((0, 4, QuantSpec()),)
+
+    xl = reduced(get_config("xlstm-1.3b"))   # 4 layers, slstm_every=2 -> 2 groups
+    xplan = ExecutionPlan.build(xl, QuantPolicy(num_layers=4, mode="int",
+                                                last_k_int4=2),
+                                backend="pallas")
+    assert xplan.segments == (
+        (0, 1, QuantSpec(mode="int", w_bits=8, a_bits=8, use_pallas=True)),
+        (1, 2, QuantSpec(mode="int", w_bits=4, a_bits=4, use_pallas=True)))
+
+
+@pytest.mark.parametrize("arch", ["stablelm-3b", "xlstm-1.3b", "zamba2-2.7b",
+                                  "seamless-m4t-medium", "tinybert4"])
+def test_plan_reproduces_legacy_segments(arch):
+    """The legacy segments_for shim and the plan resolve identically for
+    every (policy, use_pallas, fuse_epilogue) combination — i.e. build()'s
+    backend/fuse mapping matches the legacy booleans across families. (Both
+    sides share the resolver; test_segment_resolution_pinned pins its
+    actual output.)"""
+    cfg = reduced(get_config(arch))
+    n = _units(cfg)
+    policies = [None,
+                QuantPolicy(num_layers=n, mode="int", last_k_int4=0),
+                QuantPolicy(num_layers=n, mode="int", last_k_int4=n // 2),
+                QuantPolicy(num_layers=n, mode="fake", last_k_int4=n)]
+    for pol, up, fe in itertools.product(policies, (False, True),
+                                         (False, True)):
+        legacy = api.segments_for(cfg, pol, use_pallas=up, fuse_epilogue=fe)
+        plan = ExecutionPlan.build(cfg, pol,
+                                   backend="pallas" if up else "reference",
+                                   fuse_epilogue=fe)
+        assert plan.segments == tuple(legacy), (arch, pol, up, fe)
+
+
+def test_plan_auto_resolution():
+    dense = reduced(get_config("stablelm-3b"))
+    plan = ExecutionPlan.build(dense, None, backend="pallas")
+    assert plan.prefill_mode == "chunked"
+    assert plan.fuse_epilogue          # pallas backend fuses by default
+    assert plan.kv_bits == 16          # follows cfg.kv_bits
+    assert ExecutionPlan.build(dense.replace(kv_bits=8), None).kv_bits == 8
+
+    xl = reduced(get_config("xlstm-1.3b"))
+    assert ExecutionPlan.build(xl, None).prefill_mode == "token"
+    ref = ExecutionPlan.build(dense, None)
+    assert not ref.fuse_epilogue and not ref.use_pallas
+
+
+def test_plan_validation_fails_at_build():
+    dense = reduced(get_config("stablelm-3b"))
+    xl = reduced(get_config("xlstm-1.3b"))
+    with pytest.raises(ValueError, match="backend"):
+        ExecutionPlan.build(dense, None, backend="cuda")
+    with pytest.raises(ValueError, match="decode_dtype"):
+        ExecutionPlan.build(dense, None, decode_dtype="float16")
+    with pytest.raises(ValueError, match="kv_bits"):
+        ExecutionPlan.build(dense, None, kv_bits=2)
+    with pytest.raises(ValueError, match="slot cache"):
+        ExecutionPlan.build(dense, None, prefill_mode="token", kv_bits=4)
+    with pytest.raises(ValueError, match="prefill_mode"):
+        ExecutionPlan.build(xl, None, prefill_mode="chunked")
+    with pytest.raises(ValueError, match="transformer-family"):
+        ExecutionPlan.build(xl, None, kv_bits=8)
+    with pytest.raises(ValueError, match="decoder layers"):
+        ExecutionPlan.build(reduced(get_config("seamless-m4t-medium")),
+                            QuantPolicy(num_layers=7, mode="int"))
+
+
+def test_plan_meta_round_trip():
+    cfg = reduced(get_config("stablelm-3b")).replace(act="gelu")
+    pol = QuantPolicy(num_layers=cfg.num_layers, mode="int",
+                      int4_layers=(1, 3), grad_mode="ste")
+    plan = ExecutionPlan.build(cfg, pol, backend="pallas", kv_bits=4,
+                               decode_dtype="bfloat16")
+    plan2 = plan_from_meta(plan_to_meta(plan))
+    assert plan2 == plan
+
+
+def test_plan_meta_ignores_unknown_fields():
+    """Forward compat: a newer build may add cfg/policy fields without
+    bumping the artifact version; older readers must drop them, not crash."""
+    cfg = reduced(get_config("stablelm-3b"))
+    pol = QuantPolicy(num_layers=cfg.num_layers, mode="int", last_k_int4=2)
+    meta = plan_to_meta(ExecutionPlan.build(cfg, pol))
+    meta["cfg"]["some_future_knob"] = 7
+    meta["policy"]["another_future_knob"] = "x"
+    assert plan_from_meta(meta) == ExecutionPlan.build(cfg, pol)
+
+
+# ----------------------------------------------------------- engine coupling
+
+def _int_model(cfg, *, kv_bits=16, backend="reference"):
+    n = cfg.num_layers
+    pol = QuantPolicy(num_layers=n, mode="int", last_k_int4=n // 2)
+    plan = ExecutionPlan.build(cfg, pol, backend=backend, kv_bits=kv_bits)
+    return deploy(api.init_model(cfg, KEY), plan)
+
+
+def test_engine_uses_plan_decode_dtype():
+    """One dtype end-to-end: the plan's decode_dtype is what the slot cache
+    (chunked) and the decode state (token mode) actually allocate."""
+    cfg = reduced(get_config("stablelm-3b"))
+    for dt_name, dt in (("float32", jnp.float32), ("bfloat16", jnp.bfloat16)):
+        n = cfg.num_layers
+        pol = QuantPolicy(num_layers=n, mode="int", last_k_int4=n // 2)
+        plan = ExecutionPlan.build(cfg, pol, decode_dtype=dt_name)
+        model = deploy(api.init_model(cfg, KEY), plan)
+        eng = ServingEngine(model, slots=1, max_len=32)
+        assert eng.dtype == dt
+        assert eng.kv.state["k"].dtype == dt
+
+        tok_plan = ExecutionPlan.build(cfg, pol, prefill_mode="token",
+                                       decode_dtype=dt_name)
+        tok_eng = ServingEngine(model.params, tok_plan, slots=1, max_len=32)
+        assert tok_eng.state["k"].dtype == dt
+
+
+def test_engine_requires_plan_for_raw_params():
+    cfg = reduced(get_config("stablelm-3b"))
+    with pytest.raises(TypeError, match="ExecutionPlan"):
+        ServingEngine(api.init_model(cfg, KEY), slots=1, max_len=32)
+
+
+@pytest.mark.parametrize("prefill_mode", ["chunked", "token"])
+def test_empty_prompt_rejected_at_submit(prefill_mode):
+    """Regression: token mode read ``req.prompt[-1]`` with no guard — an
+    empty prompt crashed mid-step instead of failing at submit."""
+    cfg = reduced(get_config("stablelm-3b"))
+    n = cfg.num_layers
+    pol = QuantPolicy(num_layers=n, mode="int", last_k_int4=n // 2)
+    plan = ExecutionPlan.build(cfg, pol, prefill_mode=prefill_mode)
+    model = deploy(api.init_model(cfg, KEY), plan)
+    eng = ServingEngine(model, slots=1, max_len=32)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(Request(prompt=np.array([], np.int32), max_new_tokens=2))
+
+
+def test_token_mode_oversized_request_rejected():
+    """Token mode writes through a shared clamping cursor — past max_len the
+    last cache row is silently overwritten; reject at submit like chunked."""
+    cfg = reduced(get_config("stablelm-3b"))
+    plan = ExecutionPlan.build(cfg, None, prefill_mode="token")
+    eng = ServingEngine(api.init_model(cfg, KEY), plan, slots=1, max_len=16)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(Request(prompt=np.arange(1, 11, dtype=np.int32),
+                           max_new_tokens=12))
+
+
+# ------------------------------------------------------- artifact round trip
+
+def _streams(model_or_params, plan=None, *, prompts, max_new=4):
+    eng = (ServingEngine(model_or_params, plan, slots=2, max_len=64)
+           if plan is not None else
+           ServingEngine(model_or_params, slots=2, max_len=64))
+    for p in prompts:
+        eng.submit(Request(prompt=p.copy(), max_new_tokens=max_new))
+    eng.run_until_drained()
+    return {r.rid: r.out.tolist() for r in eng.done}
+
+
+@pytest.mark.parametrize("weights,kv_bits", [("int8", 8), ("int4", 4),
+                                             ("int4", 16)])
+def test_artifact_serve_matches_in_memory(tmp_path, weights, kv_bits):
+    """deploy → save → load → serve must emit token streams byte-identical
+    to serving the in-memory DeployedModel, with no fp weights in the
+    artifact (nothing to recalibrate from)."""
+    cfg = reduced(get_config("stablelm-3b")).replace(act="gelu")
+    n = cfg.num_layers
+    pol = QuantPolicy(num_layers=n, mode="int",
+                      last_k_int4=n if weights == "int4" else 0)
+    plan = ExecutionPlan.build(cfg, pol, backend="pallas", kv_bits=kv_bits)
+    model = deploy(api.init_model(cfg, KEY), plan)
+
+    prompts = [np.array([3, 1, 4, 1, 5], np.int32),
+               np.array([2, 7, 1, 8], np.int32)]
+    mem = _streams(model, prompts=prompts)
+
+    loaded = DeployedModel.load(model.save(str(tmp_path / "artifact")))
+    assert loaded.plan == plan
+    # an equal-but-distinct plan passed alongside the model is accepted
+    ServingEngine(loaded, ExecutionPlan.build(cfg, pol, backend="pallas",
+                                              kv_bits=kv_bits),
+                  slots=1, max_len=64)
+    leaf_paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                           for k in path)
+                  for path, _ in
+                  jax.tree_util.tree_flatten_with_path(loaded.params)[0]]
+    assert not any(p == "w" or p.endswith("/w") for p in leaf_paths), \
+        "artifact must hold packed codes only, no fp weights"
+
+    art = _streams(loaded, prompts=prompts)
+    assert art == mem
+
+
+def test_artifact_overwrite_and_file_collision(tmp_path):
+    """Re-exporting over an existing artifact publishes the new payload,
+    cleans up the backup, and never rmtree's the old artifact before the
+    new one lands; a plain file at the target is a clear error."""
+    from repro.checkpoint.manager import load_artifact, save_artifact
+    p = str(tmp_path / "a")
+    save_artifact(p, {"x": np.zeros(2)}, {"format": "t", "version": 1})
+    save_artifact(p, {"x": np.ones(3)}, {"format": "t", "version": 1})
+    tree, _ = load_artifact(p)
+    np.testing.assert_array_equal(tree["x"], np.ones(3))
+    leftovers = [d.name for d in tmp_path.iterdir()
+                 if d.name.startswith((".old_artifact_", ".tmp_artifact_"))]
+    assert not leftovers
+    plain = tmp_path / "plain"
+    plain.write_text("x")
+    with pytest.raises(ValueError, match="not an artifact directory"):
+        save_artifact(str(plain), {"x": np.zeros(1)}, {})
+
+
+def test_artifact_rejects_foreign_payload(tmp_path):
+    from repro.checkpoint.manager import save_artifact
+    path = save_artifact(str(tmp_path / "x"), {"a": np.zeros(2)},
+                         {"format": "something-else", "version": 1})
+    with pytest.raises(ValueError, match="artifact"):
+        DeployedModel.load(path)
+
+
+def test_serve_cli_artifact_round_trip(tmp_path, capsys):
+    """Acceptance: `python -m repro.launch.serve --artifact <path>` serves a
+    previously exported model without fp weights or recalibration, with the
+    same token accounting as the exporting run."""
+    from repro.launch import serve
+    art = str(tmp_path / "artifact")
+    base = ["--reduced", "--requests", "2", "--slots", "1", "--max-len", "64"]
+    serve.main(base + ["--export", art])
+    exported = capsys.readouterr().out
+    serve.main(["--artifact", art, "--requests", "2", "--slots", "1",
+                "--max-len", "64"])
+    served = capsys.readouterr().out
+    line = [ln for ln in exported.splitlines() if "requests," in ln]
+    line2 = [ln for ln in served.splitlines() if "requests," in ln]
+    # same request burst, same tokens-per-request accounting
+    assert line and line2
+    assert line[0].split("(")[0].split(",")[:3] == \
+        line2[0].split("(")[0].split(",")[:3]

@@ -23,8 +23,7 @@ import pytest
 
 from repro.configs import get_config, reduced
 from repro.core.policy import QuantPolicy
-from repro.core.qat import calibrate_weight_scales, default_bits_fn, \
-    deploy_params
+from repro.deploy import ExecutionPlan, deploy
 from repro.kernels import ops
 from repro.kernels.kv_pack import (dequantize_kv, kv_qmax, pack_nibbles_last,
                                    quantize_kv, unpack_nibbles_last)
@@ -39,19 +38,17 @@ def _engine(kv_bits, *, slots=2, policy="int4", max_len=64):
     cfg = reduced(get_config("stablelm-3b")).replace(act="gelu")
     n = cfg.num_layers
     if policy == "fp32":
-        pol, use_pallas, fuse = None, False, False
+        pol, backend, fuse = None, "reference", False
     else:
         pol = QuantPolicy(num_layers=n, mode="int",
                           last_k_int4=n if policy == "int4" else 0)
-        use_pallas, fuse = True, policy == "int4"
-    segs = api.segments_for(cfg, pol, use_pallas=use_pallas,
-                            fuse_epilogue=fuse)
+        backend, fuse = "pallas", policy == "int4"
+    plan = ExecutionPlan.build(cfg, pol, backend=backend, kv_bits=kv_bits,
+                               fuse_epilogue=fuse)
     params = api.init_model(cfg, KEY)
     if pol is not None:
-        params = calibrate_weight_scales(params, default_bits_fn(cfg, pol))
-        params = deploy_params(params, cfg, segs)
-    return ServingEngine(params, cfg, segs, slots=slots, max_len=max_len,
-                         kv_bits=kv_bits), cfg
+        params = deploy(params, plan).params
+    return ServingEngine(params, plan, slots=slots, max_len=max_len), cfg
 
 
 def _streams(eng, prompts, max_new=6):
@@ -226,25 +223,21 @@ def test_pallas_decode_attention_matches_jnp_path_end_to_end():
     n = cfg.num_layers
     pol = QuantPolicy(num_layers=n, mode="int", last_k_int4=0)
     streams = []
-    for use_pallas in (False, True):
-        segs = api.segments_for(cfg, pol, use_pallas=use_pallas)
-        params = api.init_model(cfg, KEY)
-        params = calibrate_weight_scales(params, default_bits_fn(cfg, pol))
-        params = deploy_params(params, cfg, segs)
-        eng = ServingEngine(params, cfg, segs, slots=2, max_len=64, kv_bits=8)
+    for backend in ("reference", "pallas"):
+        plan = ExecutionPlan.build(cfg, pol, backend=backend, kv_bits=8)
+        model = deploy(api.init_model(cfg, KEY), plan)
+        eng = ServingEngine(model, slots=2, max_len=64)
         streams.append(_streams(eng, prompts, max_new=5))
     assert streams[0] == streams[1]
 
 
 def test_token_mode_rejects_quantized_kv():
-    """Token-mode families keep the fp decode state; a quantized cache there
-    would silently take the legacy static-scale path — reject up front."""
+    """Token-mode prefill keeps the fp decode state; a quantized cache there
+    would silently take the legacy static-scale path — the plan build
+    rejects the combination up front."""
     cfg = reduced(get_config("stablelm-3b"))
-    segs = api.segments_for(cfg, None)
-    params = api.init_model(cfg, KEY)
     with pytest.raises(ValueError, match="kv_bits"):
-        ServingEngine(params, cfg, segs, slots=1, max_len=32,
-                      prefill_mode="token", kv_bits=8)
+        ExecutionPlan.build(cfg, None, prefill_mode="token", kv_bits=8)
 
 
 # ------------------------------------------------------------------ metrics

@@ -5,9 +5,8 @@ import numpy as np
 
 from repro.configs import TrainHParams, get_config, reduced
 from repro.core.policy import QuantPolicy
-from repro.core.qat import calibrate_weight_scales, default_bits_fn, \
-    deploy_params
 from repro.data import lm_batches
+from repro.deploy import ExecutionPlan, deploy
 from repro.launch.serve import Request, ServingEngine
 from repro.launch.train import run_training
 from repro.models import api
@@ -19,11 +18,9 @@ def _engine(slots=2, arch="stablelm-3b"):
     cfg = reduced(get_config(arch))
     n = cfg.num_layers
     pol = QuantPolicy(num_layers=n, mode="int", last_k_int4=n // 2)
-    segs = api.segments_for(cfg, pol)
-    params = api.init_model(cfg, KEY)
-    params = calibrate_weight_scales(params, default_bits_fn(cfg, pol))
-    return ServingEngine(deploy_params(params, cfg, segs), cfg, segs,
-                         slots=slots, max_len=64), cfg
+    plan = ExecutionPlan.build(cfg, pol)
+    model = deploy(api.init_model(cfg, KEY), plan)
+    return ServingEngine(model, slots=slots, max_len=64), cfg
 
 
 def test_engine_drains_batched_requests():

@@ -17,15 +17,14 @@ import pytest
 from repro.configs import get_config, reduced
 from repro.core.packing import quantize_weight
 from repro.core.policy import QuantPolicy
-from repro.core.qat import calibrate_weight_scales, default_bits_fn, \
-    deploy_params
+from repro.deploy import ExecutionPlan, deploy
 from repro.models import api
 from repro.serving import Request, Scheduler, ServeMetrics, ServingEngine
 
 KEY = jax.random.PRNGKey(0)
 
 
-def _engine(slots=2, *, act=None, use_pallas=False, fuse=False,
+def _engine(slots=2, *, act=None, backend="reference", fuse=None,
             last_k_int4=None, max_len=64, prefill_mode="auto"):
     cfg = reduced(get_config("stablelm-3b"))
     if act is not None:
@@ -33,13 +32,11 @@ def _engine(slots=2, *, act=None, use_pallas=False, fuse=False,
     n = cfg.num_layers
     k4 = n // 2 if last_k_int4 is None else last_k_int4
     pol = QuantPolicy(num_layers=n, mode="int", last_k_int4=k4)
-    segs = api.segments_for(cfg, pol, use_pallas=use_pallas,
-                            fuse_epilogue=fuse)
-    params = api.init_model(cfg, KEY)
-    params = calibrate_weight_scales(params, default_bits_fn(cfg, pol))
-    return ServingEngine(deploy_params(params, cfg, segs), cfg, segs,
-                         slots=slots, max_len=max_len,
-                         prefill_mode=prefill_mode), cfg
+    plan = ExecutionPlan.build(cfg, pol, backend=backend,
+                               fuse_epilogue=fuse,
+                               prefill_mode=prefill_mode)
+    model = deploy(api.init_model(cfg, KEY), plan)
+    return ServingEngine(model, slots=slots, max_len=max_len), cfg
 
 
 # ---------------------------------------------------------------- scheduler
@@ -151,12 +148,11 @@ def test_token_mode_still_supported():
 
 def test_request_exceeding_max_len_rejected():
     """Past max_len the cache scatter would drop writes silently; the engine
-    must reject the request up front instead of degrading quality."""
+    must reject the request at submit() instead of degrading quality."""
     eng, _ = _engine(slots=1, max_len=16)
-    eng.submit(Request(prompt=np.arange(1, 11, dtype=np.int32),
-                       max_new_tokens=12))
     with pytest.raises(ValueError, match="max_len"):
-        eng.run_until_drained()
+        eng.submit(Request(prompt=np.arange(1, 11, dtype=np.int32),
+                           max_new_tokens=12))
 
 
 # ------------------------------------------------------- fused decode kernel
@@ -202,7 +198,7 @@ def test_engine_fused_vs_unfused_token_streams_exact():
                np.array([2, 7, 1, 8], np.int32)]
     streams = []
     for fuse in (False, True):
-        eng, _ = _engine(slots=2, act="gelu", use_pallas=True, fuse=fuse,
+        eng, _ = _engine(slots=2, act="gelu", backend="pallas", fuse=fuse,
                          last_k_int4=4)   # all layers int4
         for p in prompts:
             eng.submit(Request(prompt=p.copy(), max_new_tokens=4))
