@@ -104,16 +104,19 @@ def main(quick: bool = False):
     assert loaded.plan.segments == int_plan.segments
     print("artifact save/load round trip OK")
 
-    # --- greedy generation with the loaded int4/int8 model
-    state = loaded.plan.decode_state(1, 64)
-    tok = jnp.asarray([[5]], jnp.int32)
-    out = []
-    for _ in range(12):
-        logits, state, _, _ = api.forward(loaded.params, loaded.plan,
-                                          state=state, tokens=tok)
-        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        out.append(int(tok[0, 0]))
-    print("int4/int8 greedy sample:", out)
+    # --- generation through the streaming API (DESIGN.md §10): greedy is
+    # temperature=0 (the default); tokens arrive as the engine produces them
+    from repro.serving import GenerationRequest, SamplingParams
+    eng = loaded.engine(slots=1, max_len=64)
+    stream = eng.submit(GenerationRequest(prompt=np.array([5], np.int32),
+                                          max_new_tokens=12))
+    out = [tok for tok in stream]          # iterator form pumps the engine
+    print("int4/int8 greedy stream:", out)
+    sampled = eng.submit(GenerationRequest(
+        prompt=np.array([5], np.int32), max_new_tokens=12,
+        sampling=SamplingParams(temperature=0.9, top_p=0.95, seed=1)))
+    print("int4/int8 sampled stream:", sampled.result().tokens.tolist())
+    eng.pop_done()
     print("quickstart complete.")
 
 

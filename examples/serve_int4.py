@@ -1,4 +1,5 @@
-"""Serve a quantized model with batched requests (the paper's deployment).
+"""Serve a quantized model with batched, streaming requests (the paper's
+deployment).
 
 The deployment flow (DESIGN.md §9): build an ``ExecutionPlan`` (segments +
 kernel selection + KV precision resolved once), ``deploy()`` the packed
@@ -7,6 +8,14 @@ through the continuous-batching engine (``repro.serving``, DESIGN.md §7) —
 chunked prefill, slot-isolated KV cache, latency metrics. The serve side
 never touches fp weights and never recalibrates, and its token streams are
 byte-identical to serving the in-memory model (asserted below).
+
+The generation API (DESIGN.md §10) on display here:
+
+* greedy ``GenerationRequest`` bursts drained via ``run_until_drained`` and
+  ``pop_done()`` (no unbounded done-list growth);
+* a sampled request (temperature/top-k/seed) iterated token-by-token through
+  its ``TokenStream`` — same tokens every run, per-request determinism;
+* a stop-token request that releases its slot early.
 
 Pass backend="pallas" to route matmuls through the int4/int8 Pallas kernels
 (fused dequant+bias+GELU decode epilogue; interpret mode off-TPU).
@@ -24,17 +33,18 @@ from repro.configs import get_config, reduced
 from repro.core.policy import QuantPolicy
 from repro.deploy import DeployedModel, ExecutionPlan, deploy
 from repro.models import api
-from repro.serving import Request, ServingEngine
+from repro.serving import GenerationRequest, SamplingParams, ServingEngine
 
 
 def _burst(eng, cfg, n, seed=0):
     rng = np.random.default_rng(seed)
     for _ in range(n):
         plen = int(rng.integers(4, 16))
-        eng.submit(Request(prompt=rng.integers(1, cfg.vocab_size, plen)
-                           .astype(np.int32), max_new_tokens=8))
+        eng.submit(GenerationRequest(
+            prompt=rng.integers(1, cfg.vocab_size, plen).astype(np.int32),
+            max_new_tokens=8))
     steps = eng.run_until_drained()
-    return steps, {r.rid: r.out.tolist() for r in eng.done}
+    return steps, {r.rid: r.out.tolist() for r in eng.pop_done()}
 
 
 def main(quick: bool = False):
@@ -71,6 +81,26 @@ def main(quick: bool = False):
     assert art_streams == mem_streams, "artifact streams diverged!"
     print(f"artifact round trip: {len(art_streams)} requests byte-identical")
     print("sample output:", art_streams[0])
+
+    # --- streaming + sampling (DESIGN.md §10): iterate tokens as produced
+    stream = eng2.submit(GenerationRequest(
+        prompt=np.array([5, 9, 2, 7], np.int32), max_new_tokens=8,
+        sampling=SamplingParams(temperature=0.8, top_k=40, seed=42)))
+    sampled = [tok for tok in stream]      # pumps the engine under the hood
+    print(f"sampled stream (T=0.8, top_k=40, seed=42): {sampled} "
+          f"[{stream.finish_reason}]")
+
+    # --- stop tokens: the request ends the moment it emits one, freeing
+    # its slot for queued work instead of decoding to max_new_tokens
+    stop = eng2.submit(GenerationRequest(
+        prompt=np.array([5, 9, 2, 7], np.int32), max_new_tokens=64,
+        stop_tokens={sampled[2]},      # same seed → same stream → stops early
+        sampling=SamplingParams(temperature=0.8, top_k=40, seed=42)))
+    r = stop.result()
+    assert r.finish_reason == "stop" and len(r.tokens) <= 3, r
+    print(f"stop-token request: {len(r.tokens)}/64 tokens "
+          f"[{r.finish_reason}] — slot released early")
+    eng2.pop_done()
 
 
 if __name__ == "__main__":

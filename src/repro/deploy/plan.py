@@ -20,9 +20,12 @@ their own copies of the family-compatibility checks.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import TYPE_CHECKING, Optional
 
 import jax.numpy as jnp
+
+if TYPE_CHECKING:   # runtime import is lazy: repro.serving imports deploy
+    from ..serving.api import SamplingParams
 
 from ..configs.base import ModelConfig
 from ..core.policy import QuantPolicy
@@ -102,13 +105,17 @@ class ExecutionPlan:
     decode_dtype: str            # 'float32' | 'bfloat16'
     fuse_epilogue: bool
     segments: tuple              # ((start, end, QuantSpec), ...)
+    #: resolved serving sampling defaults (DESIGN.md §10): requests that
+    #: carry ``sampling=None`` inherit these. Greedy unless built otherwise.
+    default_sampling: "Optional[SamplingParams]" = None
 
     # ------------------------------------------------------------- build
     @classmethod
     def build(cls, cfg: ModelConfig, policy: Optional[QuantPolicy] = None, *,
               backend: str = "reference", kv_bits: Optional[int] = None,
               prefill_mode: str = "auto", decode_dtype: str = "float32",
-              fuse_epilogue: Optional[bool] = None) -> "ExecutionPlan":
+              fuse_epilogue: Optional[bool] = None,
+              sampling=None) -> "ExecutionPlan":
         """Resolve + validate a plan.
 
         backend       'pallas' routes int matmuls (and quantized-KV decode
@@ -123,6 +130,10 @@ class ExecutionPlan:
                       statically gated to deployed int4 + gelu/relu FFNs in
                       ``models.transformer.ffn_apply``, so this is safe for
                       every segment mix); pass an explicit bool to override.
+        sampling      serving sampling defaults (``SamplingParams``, a dict
+                      of its kwargs, or None for greedy) — requests without
+                      explicit sampling inherit these; round-trips through
+                      the artifact meta like every other build knob.
         """
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, "
@@ -150,10 +161,15 @@ class ExecutionPlan:
         use_pallas = backend == "pallas"
         if fuse_epilogue is None:
             fuse_epilogue = use_pallas
+        # lazy import: repro.serving imports repro.deploy at module load, so
+        # the reverse edge must wait until build() runs (never at import)
+        from ..serving.api import SamplingParams
+        sampling = SamplingParams.resolve(sampling)
         segments = resolve_segments(cfg, policy, use_pallas, fuse_epilogue)
         return cls(cfg=cfg, policy=policy, backend=backend, kv_bits=kv_bits,
                    prefill_mode=prefill_mode, decode_dtype=decode_dtype,
-                   fuse_epilogue=fuse_epilogue, segments=tuple(segments))
+                   fuse_epilogue=fuse_epilogue, segments=tuple(segments),
+                   default_sampling=sampling)
 
     # ------------------------------------------------------------ queries
     @property
@@ -190,7 +206,9 @@ class ExecutionPlan:
         return {"backend": self.backend, "kv_bits": self.kv_bits,
                 "prefill_mode": self.prefill_mode,
                 "decode_dtype": self.decode_dtype,
-                "fuse_epilogue": self.fuse_epilogue}
+                "fuse_epilogue": self.fuse_epilogue,
+                "sampling": (None if self.default_sampling is None
+                             else dataclasses.asdict(self.default_sampling))}
 
     def describe(self) -> str:
         segs = ", ".join(f"[{s}:{e}) w{sp.w_bits or 'fp'}/a{sp.a_bits or 'fp'}"

@@ -1,4 +1,5 @@
-"""Thin CLI shim over the serving subsystem (repro/serving — DESIGN.md §7/§9).
+"""Thin CLI shim over the serving subsystem (repro/serving — DESIGN.md
+§7/§9/§10).
 
 Three entry modes:
 
@@ -9,6 +10,11 @@ Three entry modes:
                      no fp weights are initialized and nothing recalibrates;
                      token streams are byte-identical to the in-memory run
                      that exported it.
+
+Generation flags map onto the §10 API: ``--temperature/--top-k/--top-p/
+--seed`` build the burst's ``SamplingParams`` (temperature 0 = greedy),
+``--stop`` sets stop-token ids, and ``--stream`` prints each token as the
+engine emits it (the TokenStream callback form).
 
 The engine itself lives in ``repro.serving``; plans/artifacts in
 ``repro.deploy``. ``Request`` and ``ServingEngine`` stay importable from
@@ -21,7 +27,8 @@ import time
 
 import numpy as np
 
-from ..serving import Request, ServingEngine  # noqa: F401  (compat re-export)
+from ..serving import (GenerationRequest, QueueFullError,  # noqa: F401
+                       Request, SamplingParams, ServingEngine)  # (compat)
 
 
 def _build_model(args):
@@ -55,6 +62,9 @@ def main(argv=None):
     p.add_argument("--requests", type=int, default=16)
     p.add_argument("--slots", type=int, default=4)
     p.add_argument("--max-len", type=int, default=128)
+    p.add_argument("--max-queue", type=int, default=None,
+                   help="bound the pending queue (submit raises "
+                        "QueueFullError past it; default unbounded)")
     p.add_argument("--int4-last-k", type=int, default=-1)
     p.add_argument("--prefill-mode", default="auto",
                    choices=["auto", "chunked", "token"])
@@ -68,6 +78,22 @@ def main(argv=None):
                         "fp rows; 8/4 store packed codes + per-(token, head) "
                         "scales and decode via the fused Pallas "
                         "decode-attention kernel with --backend pallas")
+    p.add_argument("--temperature", type=float, default=0.0,
+                   help="sampling temperature (0 = greedy argmax, the "
+                        "legacy path)")
+    p.add_argument("--top-k", type=int, default=0,
+                   help="keep only the k highest logits (0 disables)")
+    p.add_argument("--top-p", type=float, default=1.0,
+                   help="nucleus sampling mass (1.0 disables)")
+    p.add_argument("--seed", type=int, default=0,
+                   help="sampling seed; streams are deterministic per "
+                        "(prompt, seed) regardless of batching")
+    p.add_argument("--stop", default=None, metavar="ID[,ID...]",
+                   help="comma-separated stop-token ids: emitting one ends "
+                        "the request early (finish_reason='stop')")
+    p.add_argument("--stream", action="store_true",
+                   help="print every token as the engine emits it "
+                        "(TokenStream callback form)")
     p.add_argument("--artifact", default=None, metavar="DIR",
                    help="serve a saved DeployedModel (repro.deploy) — no fp "
                         "weights, no recalibration; plan/arch flags come "
@@ -91,19 +117,40 @@ def main(argv=None):
             print(f"[serve] exported artifact to {path}")
 
     cfg = model.plan.cfg
-    eng = ServingEngine(model, slots=args.slots, max_len=args.max_len)
+    eng = ServingEngine(model, slots=args.slots, max_len=args.max_len,
+                        max_queue=args.max_queue)
+    sampling = SamplingParams(temperature=args.temperature,
+                              top_k=args.top_k, top_p=args.top_p,
+                              seed=args.seed)
+    stop = (frozenset(int(t) for t in args.stop.split(","))
+            if args.stop else frozenset())
+    on_token = ((lambda rid, tok: print(f"[stream] rid={rid} tok={tok}"))
+                if args.stream else None)
+
     rng = np.random.default_rng(0)
     t0 = time.time()
+    steps = 0
     for _ in range(args.requests):
         plen = int(rng.integers(4, 12))
-        eng.submit(Request(prompt=rng.integers(
-            1, cfg.vocab_size, plen).astype(np.int32), max_new_tokens=8))
-    steps = eng.run_until_drained()
+        req = GenerationRequest(
+            prompt=rng.integers(1, cfg.vocab_size, plen).astype(np.int32),
+            max_new_tokens=8, sampling=sampling, stop_tokens=stop)
+        while True:
+            try:
+                eng.submit(req, on_token=on_token)
+                break
+            except QueueFullError:       # backpressure: drain a round, retry
+                eng.engine_step()
+                steps += 1
+    steps += eng.run_until_drained()
     dt = time.time() - t0
-    total_tokens = sum(len(r.out) for r in eng.done)
-    print(f"[serve] {len(eng.done)} requests, {total_tokens} tokens, "
+    finished = eng.pop_done()
+    total_tokens = sum(len(r.out) for r in finished)
+    stopped = sum(r.finish_reason == "stop" for r in finished)
+    print(f"[serve] {len(finished)} requests, {total_tokens} tokens, "
           f"{steps} engine steps, {dt:.2f}s "
-          f"({total_tokens / max(dt, 1e-9):.1f} tok/s)")
+          f"({total_tokens / max(dt, 1e-9):.1f} tok/s, "
+          f"{stopped} stop-token exits)")
     print(f"[serve] {eng.metrics.report()}")
 
 

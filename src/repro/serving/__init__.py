@@ -1,22 +1,37 @@
-"""int4 serving subsystem (DESIGN.md §7).
+"""int4 serving subsystem (DESIGN.md §7, generation API §10).
 
 The deployment side of the paper, grown into a real package:
 
-* ``scheduler``  — request queue + fixed slot table, continuous-batching refill
+* ``api``        — the generation surface: ``GenerationRequest`` /
+  ``SamplingParams`` (temperature/top-k/top-p/seed, stop tokens, priority,
+  deadline), ``TokenStream`` handles that yield tokens as they are produced
+  (iterator + callback forms), ``GenerationResult``, and the batched
+  sampling math (greedy == temperature 0)
+* ``scheduler``  — priority queue (bounded, deadline-shedding) + fixed slot
+  table, continuous-batching refill
 * ``kv_cache``   — slot-state manager (per-layer KV cache, per-slot lengths,
   optional int8/int4 quantization with per-(token, head) scales — DESIGN.md §8)
-* ``engine``     — prefill/decode-separated step loop over the deployed model
-* ``metrics``    — latency/throughput recorder (tokens/sec, p50/p99 steps)
+* ``engine``     — prefill/decode-separated step loop over the deployed
+  model; ``engine_step()`` is the public pump, ``cancel(rid)`` frees a slot
+  and its KV state mid-flight
+* ``metrics``    — latency/throughput recorder (tokens/sec, p50/p99 steps,
+  TTFT and queue-wait percentiles)
 
 ``launch/serve.py`` is a thin CLI shim over this package. The engine
 consumes a ``repro.deploy`` DeployedModel (or raw params + ExecutionPlan) —
-segments, kernel selection, KV precision, prefill mode and decode dtype all
-come from the plan (DESIGN.md §9).
+segments, kernel selection, KV precision, prefill mode, decode dtype and
+default sampling all come from the plan (DESIGN.md §9).
+
+``Request`` (the seed-era dataclass) remains importable as a deprecation
+shim over ``GenerationRequest``.
 """
+from .api import (FINISH_REASONS, GenerationRequest, GenerationResult,
+                  QueueFullError, Request, SamplingParams, TokenStream)
 from .engine import ServingEngine
 from .kv_cache import SlotKVCache
 from .metrics import ServeMetrics
-from .scheduler import Request, Scheduler
+from .scheduler import Scheduler
 
-__all__ = ["Request", "Scheduler", "ServingEngine", "SlotKVCache",
-           "ServeMetrics"]
+__all__ = ["FINISH_REASONS", "GenerationRequest", "GenerationResult",
+           "QueueFullError", "Request", "SamplingParams", "Scheduler",
+           "ServeMetrics", "ServingEngine", "SlotKVCache", "TokenStream"]

@@ -1,0 +1,283 @@
+"""Generation API: requests, sampling, token streams (DESIGN.md §10).
+
+The public request/response surface of the serving engine. Three layers:
+
+* **request types** — :class:`GenerationRequest` (prompt + sampling + stop
+  conditions + priority/deadline) and :class:`SamplingParams`; the seed-era
+  :class:`Request` stays as a thin deprecation shim (same fields, greedy
+  defaults) mirroring the plan-shim pattern of DESIGN.md §9.
+* **handles** — ``engine.submit(req)`` returns a :class:`TokenStream` that
+  yields tokens as the engine produces them (iterator form) and/or invokes a
+  per-token callback; ``stream.result()`` pumps to completion and returns a
+  :class:`GenerationResult`.
+* **sampling math** — :func:`sample_token` (one logits row) and its vmapped
+  batch form :func:`sample_batch`. Greedy decoding is exactly
+  ``temperature=0`` (a raw-logits argmax, bit-identical to the legacy path);
+  otherwise temperature → top-k mask → top-p (nucleus) mask → categorical
+  draw. The PRNG key is ``fold_in(PRNGKey(seed), step)`` where ``step`` is
+  the request's OWN generated-token index, so a request's stream depends only
+  on (prompt, seed), never on which other requests share the batch.
+
+This module is a leaf: it must not import the engine/scheduler (they import
+it), and ``repro.deploy.plan`` imports it lazily for the plan's resolved
+sampling defaults.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["SamplingParams", "GenerationRequest", "GenerationResult",
+           "TokenStream", "Request", "QueueFullError", "FINISH_REASONS",
+           "sample_token", "sample_batch"]
+
+#: Terminal states of a request: hit ``max_new_tokens`` / emitted a stop
+#: token / cancelled via ``cancel(rid)`` / shed at admission past deadline.
+FINISH_REASONS = ("length", "stop", "cancelled", "shed")
+
+
+class QueueFullError(RuntimeError):
+    """Raised by ``submit`` when the scheduler's bounded queue is full —
+    backpressure for the caller instead of silent unbounded growth."""
+
+
+# --------------------------------------------------------------- parameters
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decoding knobs. The default is greedy decoding.
+
+    temperature  0 (default) is greedy argmax — exact, PRNG-free; > 0 scales
+                 logits before the softmax draw.
+    top_k        keep only the k highest logits (0 disables).
+    top_p        nucleus sampling: keep the smallest prefix of the sorted
+                 distribution with cumulative probability >= top_p
+                 (1.0 disables).
+    seed         PRNG seed; a request's stream is a pure function of
+                 (prompt, seed) regardless of batch composition.
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, "
+                             f"got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0 (0 disables), "
+                             f"got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+    @classmethod
+    def resolve(cls, value) -> "SamplingParams":
+        """None → greedy defaults; dict → kwargs (artifact meta round trip);
+        SamplingParams → itself."""
+        if value is None:
+            return cls()
+        if isinstance(value, cls):
+            return value
+        if isinstance(value, dict):
+            return cls(**value)
+        raise TypeError(f"sampling must be SamplingParams, dict or None, "
+                        f"got {type(value).__name__}")
+
+
+# ----------------------------------------------------------------- requests
+@dataclasses.dataclass
+class GenerationRequest:
+    """A generation job: prompt + sampling + stop conditions + admission.
+
+    sampling     None inherits the plan's ``default_sampling`` at submit.
+    stop_tokens  emitting any of these ends the request early
+                 (``finish_reason='stop'``); the stop token IS the stream's
+                 final token.
+    priority     higher admits first; FIFO within a priority level.
+    deadline_s   seconds after submit by which the request must be ADMITTED;
+                 past it the scheduler sheds it (``finish_reason='shed'``,
+                 empty output) instead of decoding tokens nobody is waiting
+                 for.
+    """
+
+    prompt: np.ndarray              # (prompt_len,) int32
+    max_new_tokens: int = 16
+    sampling: Optional[SamplingParams] = None
+    stop_tokens: frozenset = frozenset()
+    priority: int = 0
+    deadline_s: Optional[float] = None
+    out: Optional[np.ndarray] = None
+    rid: int = -1                   # assigned by the scheduler on submit
+    finish_reason: Optional[str] = None
+    # monotonic-clock stamps, filled in by scheduler/engine (repr noise)
+    submit_t: Optional[float] = dataclasses.field(default=None, repr=False)
+    admit_t: Optional[float] = dataclasses.field(default=None, repr=False)
+    first_token_t: Optional[float] = dataclasses.field(default=None,
+                                                       repr=False)
+
+    def __post_init__(self):
+        self.stop_tokens = frozenset(int(t) for t in self.stop_tokens)
+        if self.max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, "
+                             f"got {self.max_new_tokens}")
+
+    # ------------------------------------------------------------- timing
+    @property
+    def queue_wait_s(self) -> Optional[float]:
+        if self.submit_t is None or self.admit_t is None:
+            return None
+        return self.admit_t - self.submit_t
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        """Time to first token (submit → first emitted token)."""
+        if self.submit_t is None or self.first_token_t is None:
+            return None
+        return self.first_token_t - self.submit_t
+
+    def result(self) -> "GenerationResult":
+        assert self.finish_reason is not None, \
+            f"request {self.rid} has not finished"
+        return GenerationResult(rid=self.rid, tokens=self.out,
+                                finish_reason=self.finish_reason,
+                                ttft_s=self.ttft_s,
+                                queue_wait_s=self.queue_wait_s)
+
+
+@dataclasses.dataclass
+class Request(GenerationRequest):
+    """DEPRECATED shim — build a :class:`GenerationRequest` instead.
+
+    The seed-era ``Request(prompt, max_new_tokens)`` surface, kept so
+    existing call sites keep working unchanged: greedy (plan-default)
+    sampling, no stop tokens, priority 0, no deadline. ``out``/``rid``
+    behave exactly as before.
+    """
+
+
+@dataclasses.dataclass(frozen=True)
+class GenerationResult:
+    """Terminal snapshot of a finished request."""
+
+    rid: int
+    tokens: np.ndarray              # trimmed output (empty for shed/queued-
+    finish_reason: str              # cancel); one of FINISH_REASONS
+    ttft_s: Optional[float]
+    queue_wait_s: Optional[float]
+
+
+# ------------------------------------------------------------------ streams
+class TokenStream:
+    """Live handle to a submitted request: iterate tokens as produced.
+
+    The engine is single-threaded — callers pump it. The iterator form pumps
+    ``engine.engine_step()`` under the hood whenever no token is buffered, so
+    ``for tok in stream`` yields tokens as each engine step produces them.
+    The callback form (``on_token(rid, token)``) fires from inside the
+    engine's step, for callers running their own pump loop.
+
+    ``stream.result()`` pumps to completion; ``stream.cancel()`` frees the
+    request's slot and KV state mid-flight.
+    """
+
+    def __init__(self, engine, request: GenerationRequest,
+                 on_token: Optional[Callable[[int, int], None]] = None):
+        self._engine = engine
+        self.request = request
+        self.on_token = on_token
+        self.tokens: list[int] = []     # everything emitted so far
+        self._pending: deque[int] = deque()   # emitted, not yet iterated
+        self.finished = False
+
+    @property
+    def rid(self) -> int:
+        return self.request.rid
+
+    @property
+    def finish_reason(self) -> Optional[str]:
+        return self.request.finish_reason
+
+    # ------------------------------------------------- engine-facing hooks
+    def _push(self, token: int) -> None:
+        self.tokens.append(token)
+        self._pending.append(token)
+        if self.on_token is not None:
+            self.on_token(self.request.rid, token)
+
+    def _finish(self) -> None:
+        self.finished = True
+
+    # ---------------------------------------------------------- user side
+    def __iter__(self) -> Iterator[int]:
+        return self
+
+    def __next__(self) -> int:
+        while not self._pending:
+            if self.finished:
+                raise StopIteration
+            if not self._engine.scheduler.has_work:
+                raise RuntimeError(          # engine lost this request: bug
+                    f"request {self.rid} unfinished but engine is drained")
+            self._engine.engine_step()
+        return self._pending.popleft()
+
+    def result(self) -> GenerationResult:
+        """Pump the engine until this request finishes."""
+        while not self.finished:
+            if not self._engine.scheduler.has_work:
+                raise RuntimeError(
+                    f"request {self.rid} unfinished but engine is drained")
+            self._engine.engine_step()
+        return self.request.result()
+
+    def cancel(self) -> bool:
+        return self._engine.cancel(self.rid)
+
+
+# ----------------------------------------------------------------- sampling
+def sample_token(logits, seed, step, temperature, top_k, top_p):
+    """Sample one token id from a (vocab,) logits row.
+
+    ``temperature <= 0`` returns the exact raw-logits argmax (the PRNG path
+    is computed-and-discarded under ``where``, never observed), so greedy
+    requests are bit-identical to the legacy argmax engine. Otherwise:
+    temperature scaling → top-k mask → top-p (nucleus) mask → categorical
+    draw with key ``fold_in(PRNGKey(seed), step)``. All masks keep at least
+    the argmax, so the draw is always over a non-empty support.
+    """
+    logits = logits.astype(jnp.float32)
+    greedy = jnp.argmax(logits).astype(jnp.int32)
+    vocab = logits.shape[-1]
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    scaled = logits / jnp.maximum(temperature, 1e-6)
+    # top-k: mask everything below the k-th largest (k<=0 disables)
+    k = jnp.where(top_k > 0, top_k, vocab)
+    desc = -jnp.sort(-scaled)
+    kth = desc[jnp.clip(k - 1, 0, vocab - 1)]
+    scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+    # top-p: smallest sorted prefix with cumulative probability >= top_p
+    # (a token survives iff the mass STRICTLY before it is < top_p, so the
+    # argmax always survives; ties at the threshold prob are all kept)
+    probs = jax.nn.softmax(scaled)
+    psort = -jnp.sort(-probs)
+    keep = (jnp.cumsum(psort) - psort) < top_p
+    thresh = jnp.min(jnp.where(keep, psort, jnp.inf))
+    scaled = jnp.where(probs < thresh, -jnp.inf, scaled)
+    sampled = jax.random.categorical(key, scaled).astype(jnp.int32)
+    return jnp.where(temperature <= 0.0, greedy, sampled)
+
+
+#: Batched sampler: (B, vocab) logits + per-slot (seed, step, temperature,
+#: top_k, top_p) vectors → (B,) token ids. Each slot draws from its own
+#: request-derived key — determinism is per request, not per batch.
+sample_batch = jax.vmap(sample_token, in_axes=(0, 0, 0, 0, 0, 0))

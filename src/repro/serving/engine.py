@@ -1,4 +1,5 @@
-"""Serving engine: prefill/decode-separated step loop (DESIGN.md §7).
+"""Serving engine: prefill/decode-separated step loop (DESIGN.md §7) behind
+the streaming generation API (DESIGN.md §10).
 
 Two-phase execution over a deployed model (``repro.deploy.DeployedModel``, or
 a raw params tree plus its ``ExecutionPlan``):
@@ -10,28 +11,40 @@ a raw params tree plus its ``ExecutionPlan``):
 * **decode** — one token per step for every occupied slot, batched across the
   slot table with per-slot cache cursors (kv_cache.SlotKVCache).
 
-Everything configuration-shaped — segments, kernel selection, KV precision,
-prefill mode, decode dtype — comes from the plan; the engine itself only owns
-slots, max_len and the step loop. Family compatibility was validated when the
-plan was built, so construction here cannot produce an inconsistent engine.
+Both phases sample through ONE jitted step: the legacy per-batch ``argmax``
+is the ``temperature=0`` case of ``api.sample_batch``, which threads per-slot
+(seed, step, temperature, top_k, top_p) vectors alongside the decode state so
+a request's tokens are a function of (prompt, seed) only — never of which
+other requests share the batch.
 
-Families without a {'k','v','len'} decode cache (xlstm, hybrid, encdec) run
+``engine_step()`` is the public pump: one admit → prefill → batched-decode
+round, returning the ``(rid, token)`` pairs it emitted (``TokenStream``
+handles are fed from inside it). ``run_until_drained`` is a loop over it and
+raises when ``max_steps`` strands work. ``cancel(rid)`` frees a queued entry
+or an occupied slot (KV state reset) mid-flight.
+
+Everything configuration-shaped — segments, kernel selection, KV precision,
+prefill mode, decode dtype, default sampling — comes from the plan; the
+engine itself only owns slots, max_len and the step loop. Families without a
+{'k','v','len'} decode cache (xlstm, hybrid, encdec) run
 ``prefill_mode='token'``: the seed semantics with a shared cursor.
 """
 from __future__ import annotations
 
 import time
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..deploy import DeployedModel, ExecutionPlan
-from ..models import api
+from ..models import api as model_api
+from .api import (GenerationRequest, SamplingParams, TokenStream,
+                  sample_batch, sample_token)
 from .kv_cache import SlotKVCache
 from .metrics import ServeMetrics
-from .scheduler import Request, Scheduler
+from .scheduler import Request, Scheduler  # noqa: F401  (compat re-export)
 
 
 def _bucket_for(plen: int, max_len: int, min_bucket: int = 8) -> int:
@@ -45,11 +58,13 @@ class ServingEngine:
     """Continuous-batching engine over the deployed quantized model.
 
     ``model`` is a :class:`DeployedModel` (plan included), or a raw params
-    tree with ``plan`` passed explicitly.
+    tree with ``plan`` passed explicitly. ``max_queue`` bounds the pending
+    queue (``submit`` raises :class:`QueueFullError` past it).
     """
 
     def __init__(self, model, plan: Optional[ExecutionPlan] = None, *,
                  slots: int = 8, max_len: int = 512,
+                 max_queue: Optional[int] = None,
                  metrics: Optional[ServeMetrics] = None):
         if isinstance(model, DeployedModel):
             if plan is not None and plan != model.plan:
@@ -71,9 +86,21 @@ class ServingEngine:
         self.dtype = plan.jnp_dtype           # the ONE serving decode dtype
         self.kv_bits = plan.kv_bits
         self.prefill_mode = plan.prefill_mode
-        self.scheduler = Scheduler(slots)
+        self.default_sampling = (plan.default_sampling
+                                 if plan.default_sampling is not None
+                                 else SamplingParams())
+        self.scheduler = Scheduler(slots, max_queue=max_queue)
         self.metrics = metrics if metrics is not None else ServeMetrics()
         self.generated: list[list[int]] = [[] for _ in range(slots)]
+        self._streams: dict[int, TokenStream] = {}
+        self._events: list[tuple[int, int]] = []
+        # per-slot sampling state, threaded into the jitted step alongside
+        # the decode state (DESIGN.md §10): seed/temperature/top_k/top_p are
+        # set at admit; the step index is the slot's generated-token count.
+        self._seed = np.zeros(slots, np.int32)
+        self._temp = np.zeros(slots, np.float32)
+        self._topk = np.zeros(slots, np.int32)
+        self._topp = np.ones(slots, np.float32)
 
         if self.prefill_mode == "chunked":
             self.kv = SlotKVCache.from_plan(plan, slots, max_len)
@@ -84,18 +111,25 @@ class ServingEngine:
             self.state = plan.decode_state(slots, max_len)
             self.pos = np.zeros(slots, np.int32)   # per-slot prompt cursor
 
-        def step(params, state, tokens):
-            logits, new_state, _, _ = api.forward(
+        def step(params, state, tokens, seeds, steps, temps, top_ks, top_ps):
+            logits, new_state, _, _ = model_api.forward(
                 params, cfg, segments, state=state, tokens=tokens)
-            return jnp.argmax(logits[:, -1], axis=-1), new_state
+            toks = sample_batch(logits[:, -1], seeds, steps, temps,
+                                top_ks, top_ps)
+            return toks, new_state
 
         self._step = jax.jit(step, donate_argnums=(1,))
+        self._sample1 = jax.jit(sample_token)   # prefill's first token
 
     # ------------------------------------------------------------------ API
-    def submit(self, req: Request) -> Request:
-        """Validate + enqueue. Malformed requests are rejected HERE, for
-        both prefill modes — by decode time the bad prompt would have been
-        scattered into the cache (or indexed at [-1]) already."""
+    def submit(self, req: GenerationRequest, *,
+               on_token: Optional[Callable[[int, int], None]] = None
+               ) -> TokenStream:
+        """Validate + enqueue; returns the request's :class:`TokenStream`
+        (iterate it, or pass ``on_token`` for the callback form). Malformed
+        requests are rejected HERE, for both prefill modes — by decode time
+        the bad prompt would have been scattered into the cache (or indexed
+        at [-1]) already."""
         self.scheduler.assign_id(req)      # so rejections carry a real rid
         plen = len(req.prompt)
         if plen <= 0:
@@ -111,10 +145,46 @@ class ServingEngine:
                 f"request {req.rid}: prompt ({plen}) + max_new_tokens "
                 f"({req.max_new_tokens}) exceeds engine max_len "
                 f"({self.max_len})")
-        return self.scheduler.submit(req)
+        req.sampling = SamplingParams.resolve(
+            req.sampling if req.sampling is not None
+            else self.default_sampling)
+        stream = TokenStream(self, req, on_token=on_token)
+        self._streams[req.rid] = stream
+        try:
+            self.scheduler.submit(req)     # may raise QueueFullError
+        except Exception:
+            self._streams.pop(req.rid, None)
+            raise
+        return stream
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a queued or mid-flight request. An occupied slot is freed
+        immediately — its KV rows are zeroed and its cursor rewound — so the
+        next ``engine_step`` can admit queued work into it. Tokens already
+        generated stay on ``req.out``; ``finish_reason`` becomes
+        ``'cancelled'``. Returns False when ``rid`` is unknown or already
+        finished."""
+        req = self.scheduler.cancel(rid)
+        if req is not None:                      # still queued: never ran
+            self._finalize_unslotted(req, "cancelled")
+            return True
+        for s, req in enumerate(self.scheduler.active):
+            if req is not None and req.rid == rid:
+                req.out = np.array(self.generated[s], np.int32)
+                req.finish_reason = "cancelled"
+                self.scheduler.complete(s)
+                if self.kv is not None:
+                    self.kv.reset_slot(s)        # free the KV state now
+                self._close_stream(req)
+                return True
+        return False
+
+    def pop_done(self) -> list[GenerationRequest]:
+        """Drain completed requests (see ``Scheduler.pop_done``)."""
+        return self.scheduler.pop_done()
 
     @property
-    def done(self) -> list[Request]:
+    def done(self) -> list[GenerationRequest]:
         return self.scheduler.done
 
     @property
@@ -126,17 +196,86 @@ class ServingEngine:
         return self.scheduler.active
 
     def run_until_drained(self, max_steps: int = 10000) -> int:
+        """Pump ``engine_step`` until no work remains; raises RuntimeError
+        instead of silently stranding requests when ``max_steps`` hits."""
         steps = 0
-        while self.scheduler.has_work and steps < max_steps:
+        while self.scheduler.has_work:
+            if steps >= max_steps:
+                q = self.scheduler.queue_depth
+                a = self.scheduler.num_active
+                raise RuntimeError(
+                    f"run_until_drained: hit max_steps={max_steps} with "
+                    f"{q + a} request(s) stranded ({q} queued, {a} active)")
             self.engine_step()
             steps += 1
         return steps
 
-    def engine_step(self) -> None:
+    def engine_step(self) -> list[tuple[int, int]]:
+        """The public pump: one admit → prefill → batched-decode round.
+        Returns the ``(rid, token)`` pairs emitted this step (streams and
+        callbacks are fed from inside)."""
+        self._events = []
         if self.prefill_mode == "chunked":
             self._chunked_step()
         else:
             self._token_step()
+        for req in self.scheduler.pop_shed():
+            self._finalize_unslotted(req, "shed")
+        return self._events
+
+    # ------------------------------------------------------------ lifecycle
+    def _admit(self) -> list[tuple[int, "GenerationRequest"]]:
+        """Scheduler admit + per-slot sampling-state install + queue-wait
+        metric."""
+        placed = self.scheduler.admit()
+        for s, req in placed:
+            sp = req.sampling
+            self._seed[s] = np.int32(sp.seed & 0x7FFFFFFF)
+            self._temp[s] = sp.temperature
+            self._topk[s] = sp.top_k
+            self._topp[s] = sp.top_p
+            if req.queue_wait_s is not None:
+                self.metrics.record_wait("queue_wait", req.queue_wait_s)
+        return placed
+
+    def _emit(self, req: GenerationRequest, token: int) -> None:
+        if req.first_token_t is None:
+            req.first_token_t = time.monotonic()
+            if req.ttft_s is not None:
+                self.metrics.record_wait("ttft", req.ttft_s)
+        stream = self._streams.get(req.rid)
+        if stream is not None:
+            stream._push(token)
+        self._events.append((req.rid, token))
+
+    def _close_stream(self, req: GenerationRequest) -> None:
+        stream = self._streams.pop(req.rid, None)
+        if stream is not None:
+            stream._finish()
+
+    def _finalize_unslotted(self, req: GenerationRequest,
+                            reason: str) -> None:
+        """Finish a request that never occupied a slot (queued-cancel or
+        deadline shed): empty output, straight to done."""
+        req.out = np.zeros(0, np.int32)
+        req.finish_reason = reason
+        self.scheduler.done.append(req)
+        self._close_stream(req)
+
+    def _maybe_complete(self, slot: int, req: GenerationRequest) -> None:
+        toks = self.generated[slot]
+        if toks and toks[-1] in req.stop_tokens:
+            self._complete(slot, req, "stop")    # stop token stays in out
+        elif len(toks) >= req.max_new_tokens:
+            self._complete(slot, req, "length")
+
+    def _complete(self, slot: int, req: GenerationRequest,
+                  reason: str) -> None:
+        req.out = np.array(self.generated[slot][:req.max_new_tokens],
+                           np.int32)
+        req.finish_reason = reason
+        self.scheduler.complete(slot)
+        self._close_stream(req)
 
     # ------------------------------------------------------------- chunked
     def _prefill_fn(self, bucket: int):
@@ -149,14 +288,14 @@ class ServingEngine:
                 # prefill always runs on the fp cache regardless of
                 # plan.kv_bits; quantization happens on slot insert
                 st = plan.decode_state(1, bucket, kv_bits=16)
-                logits, st2, _, _ = api.forward(
+                logits, st2, _, _ = model_api.forward(
                     params, cfg, segments, state=st, tokens=tokens)
                 return logits, st2
 
             fn = self._prefill_fns[bucket] = jax.jit(pf)
         return fn
 
-    def _prefill_into_slot(self, slot: int, req: Request) -> None:
+    def _prefill_into_slot(self, slot: int, req: GenerationRequest) -> None:
         plen = len(req.prompt)
         assert plen > 0, f"request {req.rid}: empty prompt past submit()"
         bucket = _bucket_for(plen, self.max_len)
@@ -165,15 +304,28 @@ class ServingEngine:
         t0 = time.perf_counter()
         logits, pstate = self._prefill_fn(bucket)(
             self.params, jnp.asarray(toks))
-        first = int(np.asarray(jnp.argmax(logits[0, plen - 1])))
+        first = int(np.asarray(self._sample1(
+            logits[0, plen - 1], self._seed[slot], np.int32(0),
+            self._temp[slot], self._topk[slot], self._topp[slot])))
         self.kv.reset_slot(slot)
         self.kv.insert_prefill(slot, pstate, plen, bucket)
         self.metrics.record("prefill", time.perf_counter() - t0, plen)
         self.generated[slot] = [first]
-        self._maybe_complete(slot, req)
+        self._emit(req, first)
+        if self.scheduler.active[slot] is req:   # callback may have cancelled
+            self._maybe_complete(slot, req)
+
+    def _gen_steps(self) -> np.ndarray:
+        """Per-slot index of the NEXT generated token (the sampling step fed
+        to ``fold_in``), so token i of a request always draws from the same
+        key regardless of batch composition."""
+        return np.array([len(self.generated[s]) for s in range(self.slots)],
+                        np.int32)
 
     def _chunked_step(self) -> None:
-        for s, req in self.scheduler.admit():
+        for s, req in self._admit():
+            if self.scheduler.active[s] is not req:
+                continue   # an earlier prefill's on_token callback cancelled
             self._prefill_into_slot(s, req)
         active = self.scheduler.active_slots()
         if not active:
@@ -182,26 +334,26 @@ class ServingEngine:
         for s in active:
             toks[s, 0] = self.generated[s][-1]
         t0 = time.perf_counter()
-        next_tok, self.kv.state = self._step(self.params, self.kv.state,
-                                             jnp.asarray(toks))
+        next_tok, self.kv.state = self._step(
+            self.params, self.kv.state, jnp.asarray(toks),
+            self._seed, self._gen_steps(), self._temp, self._topk,
+            self._topp)
         next_tok = np.asarray(next_tok)
         self.metrics.record("decode", time.perf_counter() - t0, len(active))
         for s in active:
             req = self.scheduler.active[s]
+            if req is None:    # freed mid-step by an on_token cancel()
+                continue
             self.generated[s].append(int(next_tok[s]))
-            self._maybe_complete(s, req)
-
-    def _maybe_complete(self, slot: int, req: Request) -> None:
-        if len(self.generated[slot]) >= req.max_new_tokens:
-            req.out = np.array(self.generated[slot][:req.max_new_tokens],
-                               np.int32)
-            self.scheduler.complete(slot)
+            self._emit(req, int(next_tok[s]))
+            if self.scheduler.active[s] is req:   # ... or a self-cancel
+                self._maybe_complete(s, req)
 
     # --------------------------------------------------------------- token
     def _token_step(self) -> None:
         """Seed semantics: prompts fed one token per batched step (global
         cache cursor; used by families without a KV slot cache)."""
-        for s, _req in self.scheduler.admit():
+        for s, _req in self._admit():
             self.generated[s] = []
             self.pos[s] = 0
         active = self.scheduler.active_slots()
@@ -215,8 +367,10 @@ class ServingEngine:
             else:                                  # submit() bans empty
                 toks[s, 0] = self.generated[s][-1]  # prompts: always filled
         t0 = time.perf_counter()
-        next_tok, self.state = self._step(self.params, self.state,
-                                          jnp.asarray(toks))
+        next_tok, self.state = self._step(
+            self.params, self.state, jnp.asarray(toks),
+            self._seed, self._gen_steps(), self._temp, self._topk,
+            self._topp)
         next_tok = np.asarray(next_tok)
         # a slot emits a generated token this step once it has consumed its
         # last prompt token, i.e. pos >= plen - 1 before the increment
@@ -226,7 +380,11 @@ class ServingEngine:
         self.metrics.record("decode", time.perf_counter() - t0, n_decoding)
         for s in active:
             req = self.scheduler.active[s]
+            if req is None:    # freed mid-step by an on_token cancel()
+                continue
             self.pos[s] += 1
             if self.pos[s] >= len(req.prompt):
                 self.generated[s].append(int(next_tok[s]))
-                self._maybe_complete(s, req)
+                self._emit(req, int(next_tok[s]))
+                if self.scheduler.active[s] is req:   # ... or a self-cancel
+                    self._maybe_complete(s, req)

@@ -1,8 +1,12 @@
-"""Latency/throughput recorder for the serving engine (DESIGN.md §7).
+"""Latency/throughput recorder for the serving engine (DESIGN.md §7/§10).
 
-Records (kind, seconds, tokens) events — kind is 'prefill' or 'decode' — and
-summarizes tokens/sec plus p50/p99 step latency per kind. Pure host-side
-bookkeeping; never touches device state.
+Records (kind, seconds, tokens) step events — kind is 'prefill' or 'decode'
+— plus per-request wait samples ('ttft': submit → first emitted token,
+'queue_wait': submit → slot admission), and summarizes tokens/sec, p50/p99
+step latency per kind and p50/p99 of the per-request waits. Wait samples are
+kept OUT of the busy-time denominator — queueing is not compute, so it must
+not deflate tokens/sec. Pure host-side bookkeeping; never touches device
+state.
 """
 from __future__ import annotations
 
@@ -10,14 +14,33 @@ import time
 
 import numpy as np
 
+#: per-request wait kinds recorded via ``record_wait``
+WAIT_KINDS = ("ttft", "queue_wait")
+
+
+def _pcts(lat: np.ndarray) -> tuple[float, float]:
+    """p50/p99 with the sub-2-sample guard: interpolating percentiles over a
+    lone sample is meaningless and np.percentile warns/raises on degenerate
+    inputs depending on dtype — report the sample as every percentile."""
+    if len(lat) < 2:
+        return float(lat[0] * 1e3), float(lat[0] * 1e3)
+    return (float(np.percentile(lat, 50) * 1e3),
+            float(np.percentile(lat, 99) * 1e3))
+
 
 class ServeMetrics:
     def __init__(self):
         self._events: list[tuple[str, float, int]] = []
+        self._waits: list[tuple[str, float]] = []
         self._t0 = time.perf_counter()
 
     def record(self, kind: str, seconds: float, tokens: int) -> None:
         self._events.append((kind, seconds, tokens))
+
+    def record_wait(self, kind: str, seconds: float) -> None:
+        """Per-request wait sample: 'ttft' or 'queue_wait'."""
+        assert kind in WAIT_KINDS, kind
+        self._waits.append((kind, seconds))
 
     def _kind(self, kind: str) -> tuple[np.ndarray, int]:
         lat = np.array([s for k, s, _ in self._events if k == kind])
@@ -34,21 +57,21 @@ class ServeMetrics:
                 continue
             out[f"{kind}_steps"] = len(lat)
             out[f"{kind}_tokens"] = toks
-            # sub-2-sample windows (tiny --quick bench runs): interpolating
-            # percentiles is meaningless and np.percentile warns/raises on
-            # degenerate inputs depending on dtype — report the lone sample
-            # as every percentile instead of crashing the bench job.
-            if len(lat) < 2:
-                p50 = p99 = float(lat[0] * 1e3)
-            else:
-                p50 = float(np.percentile(lat, 50) * 1e3)
-                p99 = float(np.percentile(lat, 99) * 1e3)
+            p50, p99 = _pcts(lat)
             out[f"{kind}_p50_ms"] = p50
             out[f"{kind}_p99_ms"] = p99
             out[f"{kind}_mean_ms"] = float(lat.mean() * 1e3)
         out["total_tokens"] = total_tokens
         busy = sum(s for _, s, _ in self._events)
         out["tokens_per_s"] = total_tokens / max(busy, 1e-9)
+        for kind in WAIT_KINDS:
+            lat = np.array([s for k, s in self._waits if k == kind])
+            if len(lat) == 0:
+                continue
+            p50, p99 = _pcts(lat)
+            out[f"{kind}_n"] = len(lat)
+            out[f"{kind}_p50_ms"] = p50
+            out[f"{kind}_p99_ms"] = p99
         return out
 
     def report(self) -> str:
@@ -59,5 +82,10 @@ class ServeMetrics:
                 parts.append(
                     f"{kind}: {s[f'{kind}_steps']} steps "
                     f"p50 {s[f'{kind}_p50_ms']:.1f}ms "
+                    f"p99 {s[f'{kind}_p99_ms']:.1f}ms")
+        for kind in WAIT_KINDS:
+            if f"{kind}_n" in s:
+                parts.append(
+                    f"{kind}: p50 {s[f'{kind}_p50_ms']:.1f}ms "
                     f"p99 {s[f'{kind}_p99_ms']:.1f}ms")
         return " | ".join(parts)

@@ -1,41 +1,58 @@
-"""Request scheduler: FIFO queue + fixed slot table with continuous refill.
+"""Request scheduler: priority queue + fixed slot table with continuous
+refill (DESIGN.md §7, admission policy §10).
 
-Continuous-batching-lite (DESIGN.md §7): the engine decodes one token per
-step for every occupied slot; whenever a request finishes, its slot is
-refilled from the queue on the next ``admit`` — no global batch barrier, so
-short requests never wait for long ones.
+Continuous-batching-lite: the engine decodes one token per step for every
+occupied slot; whenever a request finishes, its slot is refilled from the
+queue on the next ``admit`` — no global batch barrier, so short requests
+never wait for long ones.
+
+Admission policy (DESIGN.md §10):
+
+* **priority** — higher ``GenerationRequest.priority`` admits first; FIFO
+  within a priority level (a monotone sequence number breaks heap ties).
+* **bounded queue** — ``max_queue`` caps pending depth; ``submit`` raises
+  :class:`~repro.serving.api.QueueFullError` (backpressure) instead of
+  growing without bound under overload.
+* **deadline shedding** — a request whose ``deadline_s`` elapsed before a
+  slot freed up is shed at ``admit`` time (never decoded); the engine drains
+  ``pop_shed()`` each step and finalizes those with ``finish_reason='shed'``.
+* **drain semantics** — completed requests accumulate in ``done`` only until
+  ``pop_done()`` is called, so a long-lived engine does not leak every
+  request it ever served.
 """
 from __future__ import annotations
 
-import dataclasses
-from collections import deque
-from typing import Optional
+import heapq
+import itertools
+import time
+from typing import Callable, Optional
 
-import numpy as np
-
-
-@dataclasses.dataclass
-class Request:
-    prompt: np.ndarray              # (prompt_len,) int32
-    max_new_tokens: int = 16
-    out: Optional[np.ndarray] = None
-    rid: int = -1                   # assigned by the scheduler on submit
+from .api import (GenerationRequest, QueueFullError,  # noqa: F401
+                  Request)                            # compat re-export
 
 
 class Scheduler:
     """Owns the queue, the slot table and request lifecycle bookkeeping."""
 
-    def __init__(self, slots: int):
+    def __init__(self, slots: int, max_queue: Optional[int] = None,
+                 clock: Callable[[], float] = time.monotonic):
         if slots < 1:
             raise ValueError(f"need at least one slot, got {slots}")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1 or None, "
+                             f"got {max_queue}")
         self.slots = slots
-        self.queue: deque[Request] = deque()
-        self.active: list[Optional[Request]] = [None] * slots
-        self.done: list[Request] = []
+        self.max_queue = max_queue
+        self._clock = clock
+        self._heap: list[tuple[int, int, GenerationRequest]] = []
+        self._seq = itertools.count()        # FIFO within a priority level
+        self.active: list[Optional[GenerationRequest]] = [None] * slots
+        self.done: list[GenerationRequest] = []
+        self._shed: list[GenerationRequest] = []
         self._next_id = 0
 
     # ------------------------------------------------------------- lifecycle
-    def assign_id(self, req: Request) -> Request:
+    def assign_id(self, req: GenerationRequest) -> GenerationRequest:
         """Give a request its rid without enqueueing it (the engine assigns
         before validation so rejections reference a real request id)."""
         if req.rid < 0:
@@ -43,32 +60,86 @@ class Scheduler:
             self._next_id += 1
         return req
 
-    def submit(self, req: Request) -> Request:
+    def submit(self, req: GenerationRequest) -> GenerationRequest:
         self.assign_id(req)
-        self.queue.append(req)
+        if self.max_queue is not None and self.queue_depth >= self.max_queue:
+            raise QueueFullError(
+                f"request {req.rid}: queue full ({self.queue_depth}/"
+                f"{self.max_queue} pending) — retry or raise max_queue")
+        req.submit_t = self._clock()
+        heapq.heappush(self._heap, (-req.priority, next(self._seq), req))
         return req
 
-    def admit(self) -> list[tuple[int, Request]]:
-        """Fill every free slot from the queue; returns the new placements."""
+    def cancel(self, rid: int) -> Optional[GenerationRequest]:
+        """Cancel a QUEUED request: the heap entry is removed EAGERLY (a
+        lazy tombstone would outlive ``max_queue`` accounting and leak
+        prompts while every slot is busy). Returns the request, or None when
+        ``rid`` is not queued — active-slot cancellation is the engine's job
+        (it owns the KV state that must be freed)."""
+        for i, (_, _, req) in enumerate(self._heap):
+            if req.rid == rid:
+                self._heap[i] = self._heap[-1]
+                self._heap.pop()
+                heapq.heapify(self._heap)
+                return req
+        return None
+
+    def admit(self) -> list[tuple[int, GenerationRequest]]:
+        """Fill free slots from the queue in priority order; returns the new
+        placements. Requests whose deadline elapsed are shed into
+        ``pop_shed()`` instead of placed."""
         placed = []
-        for s in range(self.slots):
-            if self.active[s] is None and self.queue:
-                req = self.queue.popleft()
-                self.active[s] = req
-                placed.append((s, req))
+        now = self._clock()
+        free = [s for s, r in enumerate(self.active) if r is None]
+        while free and self._heap:
+            _, _, req = heapq.heappop(self._heap)
+            if (req.deadline_s is not None and req.submit_t is not None
+                    and now - req.submit_t > req.deadline_s):
+                self._shed.append(req)
+                continue
+            slot = free.pop(0)
+            req.admit_t = now
+            self.active[slot] = req
+            placed.append((slot, req))
         return placed
 
-    def complete(self, slot: int) -> Request:
+    def complete(self, slot: int) -> GenerationRequest:
         req = self.active[slot]
         assert req is not None, f"slot {slot} is empty"
         self.active[slot] = None
         self.done.append(req)
         return req
 
+    # --------------------------------------------------------------- drains
+    def pop_done(self) -> list[GenerationRequest]:
+        """Return-and-clear the completed list (the non-leaking way to
+        consume results from a long-lived engine; ``done`` keeps
+        accumulating otherwise)."""
+        drained, self.done = self.done, []
+        return drained
+
+    def pop_shed(self) -> list[GenerationRequest]:
+        """Return-and-clear requests shed at admission (deadline expired);
+        the engine finalizes these with ``finish_reason='shed'``."""
+        drained, self._shed = self._shed, []
+        return drained
+
     # ------------------------------------------------------------- queries
     @property
+    def queue(self) -> list[GenerationRequest]:
+        """Pending requests in admission order (a snapshot — the live
+        structure is a heap; supports ``len``/iteration like the old
+        deque)."""
+        return [req for _, _, req in sorted(self._heap)]
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._heap)
+
+    @property
     def has_work(self) -> bool:
-        return bool(self.queue) or any(r is not None for r in self.active)
+        return (self.queue_depth > 0
+                or any(r is not None for r in self.active))
 
     @property
     def num_active(self) -> int:

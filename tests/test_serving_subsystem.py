@@ -64,6 +64,10 @@ def test_scheduler_refills_freed_slots():
         sch.complete(s)
     assert not sch.has_work
     assert sorted(r.rid for r in sch.done) == [0, 1, 2, 3, 4]
+    # drain semantics: pop_done() empties the list (no unbounded growth on
+    # a long-lived engine) and is idempotent
+    assert sorted(r.rid for r in sch.pop_done()) == [0, 1, 2, 3, 4]
+    assert sch.done == [] and sch.pop_done() == []
 
 
 def test_scheduler_preserves_fifo_order():

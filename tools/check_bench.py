@@ -94,9 +94,15 @@ def main() -> int:
         c = cur["tokens_per_s"] / cur_ref
         floor = b * (1.0 - args.max_regression)
         status = "FAIL" if c < floor else "ok"
+        # newer runs carry extra per-request keys (ttft_*/queue_wait_*,
+        # DESIGN.md §10); they are informational here — the gate keys on
+        # tokens_per_s only, so old baselines without them stay valid
+        ttft = cur.get("ttft_p50_ms")
+        extra = f", ttft p50 {ttft:.1f}ms" if ttft is not None else ""
         print(f"{status}: {name}: {c:.3f}x of {REFERENCE_VARIANT} "
               f"({cur['tokens_per_s']:.1f} tok/s) vs baseline {b:.3f}x "
-              f"({base['tokens_per_s']:.1f} tok/s), floor {floor:.3f}x")
+              f"({base['tokens_per_s']:.1f} tok/s), floor {floor:.3f}x"
+              f"{extra}")
         if c < floor:
             failures.append(name)
     for name in sorted(set(current["variants"]) - set(baseline["variants"])):
