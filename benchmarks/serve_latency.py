@@ -12,6 +12,13 @@ from the engine's ServeMetrics recorder, and writes a machine-readable
 ``BENCH_serve.json`` consumed by the CI bench gate (``tools/check_bench.py``
 — the gate keys on ``tokens_per_s`` only and tolerates the extra keys).
 
+A second, NON-gated section (``prefix_scenario``, DESIGN.md §11) measures
+the repeated-prefix workload: every request shares a common system-prompt
+prefix, served once with the prefix cache off and once on. Reported per
+variant: prefill tokens actually computed, prefix hit rate, and TTFT p50 —
+the reuse claim is "≥ 50% fewer prefill tokens computed on a warm cache",
+which is deterministic, unlike interpret-mode wall clocks.
+
 Runs on CPU: the int paths execute the Pallas kernels in interpret mode (the
 same code path that compiles to Mosaic on TPU), with the int4 variant using
 the fused dequant+bias+GELU decode epilogue. Interpret-mode timings measure
@@ -34,7 +41,7 @@ from repro.configs import get_config, reduced
 from repro.core.policy import QuantPolicy
 from repro.deploy import ExecutionPlan, deploy
 from repro.models import api
-from repro.serving import GenerationRequest, ServeMetrics, ServingEngine
+from repro.serving import GenerationRequest, ServingEngine
 
 
 def _build(cfg, policy, backend, fuse):
@@ -50,13 +57,15 @@ def _build(cfg, policy, backend, fuse):
     return params
 
 
-def _serve_burst(eng, cfg, n_requests, max_new, seed=0):
+def _serve_burst(eng, cfg, n_requests, max_new, seed=0, prefix=None):
     rng = np.random.default_rng(seed)
+    shared = (np.zeros(0, np.int32) if prefix is None
+              else np.asarray(prefix, np.int32))
     for _ in range(n_requests):
         plen = int(rng.integers(4, 12))
-        eng.submit(GenerationRequest(
-            prompt=rng.integers(1, cfg.vocab_size, plen).astype(np.int32),
-            max_new_tokens=max_new))
+        tail = rng.integers(1, cfg.vocab_size, plen).astype(np.int32)
+        eng.submit(GenerationRequest(prompt=np.concatenate([shared, tail]),
+                                     max_new_tokens=max_new))
     eng.run_until_drained()
     eng.pop_done()
 
@@ -107,16 +116,69 @@ def run_variants(quick: bool = False) -> dict:
         # one-sided (contention only ever slows a run down), so the max
         # tok/s burst is the least-contended measurement of the same code
         # path — single tiny bursts flapped the CI gate by 2x run-to-run
+        eng.metrics.pop_summary()           # drop warmup events
         best = None
         for rep in range(3):
-            eng.metrics = ServeMetrics()
             _serve_burst(eng, cfg, n_requests=n_requests, max_new=max_new,
                          seed=rep)
-            s = eng.metrics.summary()
+            s = eng.metrics.pop_summary()   # drain: bounded between bursts
             if best is None or s["tokens_per_s"] > best["tokens_per_s"]:
                 best = s
         results[name] = best
     return results
+
+
+def run_prefix_scenario(quick: bool = False) -> dict:
+    """Repeated-prefix workload (DESIGN.md §11): every request = one shared
+    16-token system prefix + a random tail. Served with the prefix cache off
+    vs on (batched prefill on in both), same prompts. The reuse headline is
+    ``prefill_tokens`` — tokens actually computed — which is deterministic;
+    tok/s and TTFT ride along for trend-watching but are NOT gated."""
+    cfg = reduced(get_config("stablelm-3b")).replace(act="gelu")
+    n = cfg.num_layers
+    n_requests = 4 if quick else 12
+    max_new = 4 if quick else 8
+    rng = np.random.default_rng(7)
+    prefix = rng.integers(1, cfg.vocab_size, 16).astype(np.int32)
+
+    int4_pol = QuantPolicy(num_layers=n, mode="int", last_k_int4=n)
+    int8_pol = QuantPolicy(num_layers=n, mode="int", last_k_int4=0)
+    variants = [("int4_kv4", int4_pol, 4)]
+    if not quick:
+        variants.append(("int8_kv8", int8_pol, 8))
+    out = {}
+    for name, policy, kv_bits in variants:
+        params = _build(cfg, policy, "pallas", kv_bits == 4)
+        for mode, budget in (("off", 0), ("on", 32 << 20)):
+            plan = ExecutionPlan.build(cfg, policy, backend="pallas",
+                                       kv_bits=kv_bits,
+                                       fuse_epilogue=kv_bits == 4,
+                                       prefix_cache=budget, prefill_batch=4)
+            eng = ServingEngine(params, plan, slots=2, max_len=64)
+            _warmup(eng, cfg)
+            eng.metrics.pop_summary()
+            best = None
+            for rep in range(3):
+                _serve_burst(eng, cfg, n_requests=n_requests,
+                             max_new=max_new, seed=rep, prefix=prefix)
+                s = eng.metrics.pop_summary()
+                if best is None or s["tokens_per_s"] > best["tokens_per_s"]:
+                    best = s
+            # all prefill/prefix counters come from the LAST rep as one
+            # coherent set: rep 0 warms the cache (its first request
+            # computes the prefix), reps 1-2 are fully warm and their
+            # counts are deterministic — unlike the timings, which keep the
+            # best-of-3 selection above. Mixing reps per-key would emit an
+            # internally inconsistent record.
+            for key in ("prefill_tokens", "prefill_steps", "prefix_lookups",
+                        "prefix_hit_rate", "prefill_tokens_saved",
+                        "prefix_reuse_frac"):
+                if key in s:
+                    best[key] = s[key]
+                else:
+                    best.pop(key, None)
+            out[f"{name}_prefix_{mode}"] = best
+    return out
 
 
 def main(quick: bool = False, out: str | None = "BENCH_serve.json") -> None:
@@ -133,6 +195,15 @@ def main(quick: bool = False, out: str | None = "BENCH_serve.json") -> None:
               f"{s.get('ttft_p50_ms', 0):.2f},"
               f"{s.get('queue_wait_p50_ms', 0):.2f},"
               f"{s['total_tokens']}")
+    prefix = run_prefix_scenario(quick=quick)
+    print("prefix_variant,prefill_tokens,prefix_hit_rate,"
+          "prefill_tokens_saved,ttft_p50_ms,tokens_per_s")
+    for name, s in prefix.items():
+        print(f"{name},{s['prefill_tokens']},"
+              f"{s.get('prefix_hit_rate', 0):.2f},"
+              f"{s.get('prefill_tokens_saved', 0)},"
+              f"{s.get('ttft_p50_ms', 0):.2f},"
+              f"{s['tokens_per_s']:.1f}")
     if out:
         payload = {
             "bench": "serve_latency",
@@ -140,6 +211,9 @@ def main(quick: bool = False, out: str | None = "BENCH_serve.json") -> None:
             "backend": jax.default_backend(),
             "platform": platform.platform(),
             "variants": results,
+            # informational, never gated (tools/check_bench.py prints it):
+            # repeated-prefix workload, cache off vs on (DESIGN.md §11)
+            "prefix_scenario": prefix,
         }
         with open(out, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)

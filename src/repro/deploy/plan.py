@@ -108,6 +108,12 @@ class ExecutionPlan:
     #: resolved serving sampling defaults (DESIGN.md §10): requests that
     #: carry ``sampling=None`` inherit these. Greedy unless built otherwise.
     default_sampling: "Optional[SamplingParams]" = None
+    #: shared-prefix KV reuse budget in bytes (DESIGN.md §11); 0 disables.
+    #: Artifacts written before this knob existed load with it off.
+    prefix_cache: int = 0
+    #: max admissions grouped into ONE batch-N prefill forward (DESIGN.md
+    #: §11); 1 keeps the serial batch-1 prefill schedule.
+    prefill_batch: int = 1
 
     # ------------------------------------------------------------- build
     @classmethod
@@ -115,7 +121,8 @@ class ExecutionPlan:
               backend: str = "reference", kv_bits: Optional[int] = None,
               prefill_mode: str = "auto", decode_dtype: str = "float32",
               fuse_epilogue: Optional[bool] = None,
-              sampling=None) -> "ExecutionPlan":
+              sampling=None, prefix_cache: int = 0,
+              prefill_batch: int = 1) -> "ExecutionPlan":
         """Resolve + validate a plan.
 
         backend       'pallas' routes int matmuls (and quantized-KV decode
@@ -134,6 +141,12 @@ class ExecutionPlan:
                       of its kwargs, or None for greedy) — requests without
                       explicit sampling inherit these; round-trips through
                       the artifact meta like every other build knob.
+        prefix_cache  byte budget for shared-prefix KV reuse (DESIGN.md
+                      §11); 0 (the default) disables it. Needs the chunked
+                      slot-cache prefill path.
+        prefill_batch max same-bucket admissions grouped into one batch-N
+                      prefill forward (compiled per (bucket, n) with n
+                      padded to a power of two); 1 keeps serial prefills.
         """
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, "
@@ -157,6 +170,23 @@ class ExecutionPlan:
             raise ValueError(
                 "kv_bits < 16 needs the chunked slot cache; token-mode "
                 "prefill keeps the fp decode state")
+        prefix_cache = int(prefix_cache)
+        prefill_batch = int(prefill_batch)
+        if prefix_cache < 0:
+            raise ValueError(f"prefix_cache must be >= 0 (bytes; 0 "
+                             f"disables), got {prefix_cache}")
+        if prefill_batch < 1:
+            raise ValueError(f"prefill_batch must be >= 1, "
+                             f"got {prefill_batch}")
+        if prefix_cache and prefill_mode != "chunked":
+            raise ValueError(
+                "prefix_cache needs the chunked slot-cache prefill path; "
+                f"prefill_mode={prefill_mode!r} has no KV rows to reuse")
+        if prefix_cache and cfg.learned_pos:
+            raise ValueError(
+                "prefix_cache: block-chunked prefill derives positions from "
+                "the KV cursor (RoPE); learned-pos embeddings index from 0 "
+                "and would disagree between chunked and whole-prompt runs")
 
         use_pallas = backend == "pallas"
         if fuse_epilogue is None:
@@ -169,7 +199,8 @@ class ExecutionPlan:
         return cls(cfg=cfg, policy=policy, backend=backend, kv_bits=kv_bits,
                    prefill_mode=prefill_mode, decode_dtype=decode_dtype,
                    fuse_epilogue=fuse_epilogue, segments=tuple(segments),
-                   default_sampling=sampling)
+                   default_sampling=sampling, prefix_cache=prefix_cache,
+                   prefill_batch=prefill_batch)
 
     # ------------------------------------------------------------ queries
     @property
@@ -208,7 +239,9 @@ class ExecutionPlan:
                 "decode_dtype": self.decode_dtype,
                 "fuse_epilogue": self.fuse_epilogue,
                 "sampling": (None if self.default_sampling is None
-                             else dataclasses.asdict(self.default_sampling))}
+                             else dataclasses.asdict(self.default_sampling)),
+                "prefix_cache": self.prefix_cache,
+                "prefill_batch": self.prefill_batch}
 
     def describe(self) -> str:
         segs = ", ".join(f"[{s}:{e}) w{sp.w_bits or 'fp'}/a{sp.a_bits or 'fp'}"

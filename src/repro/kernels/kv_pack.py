@@ -105,3 +105,26 @@ def kv_code_shape(hd: int, bits: int) -> int:
 
 def kv_code_dtype(bits: int):
     return jnp.uint8 if bits == 4 else jnp.int8
+
+
+def kv_buffer_keys(bits: int) -> tuple[str, ...]:
+    """The K/V buffer names of a cache state at this precision — the keys a
+    row-copy (slot scatter, prefix-cache entry) must carry alongside 'len'.
+    Shared by serving/kv_cache and serving/prefix_cache so the packed layout
+    is spelled out exactly once."""
+    if bits in (8, 4):
+        return ("k_q", "v_q", "k_scale", "v_scale")
+    if bits == 16:
+        return ("k", "v")
+    raise ValueError(f"kv_bits must be 16, 8 or 4, got {bits}")
+
+
+def kv_row_bytes(n_kv: int, hd: int, bits: int, *,
+                 fp_bytes: int = 4) -> int:
+    """Bytes one cached token row costs across K+V per layer: codes + per-
+    (token, head) f32 scales for bits 8/4, plain fp rows for 16. This is the
+    quantity the prefix cache's byte budget buys — int4 rows are ~7x smaller
+    than f32, so the same budget holds ~7x more reusable prefix tokens."""
+    if bits == 16:
+        return 2 * n_kv * hd * fp_bytes
+    return 2 * (n_kv * kv_code_shape(hd, bits) + n_kv * 4)

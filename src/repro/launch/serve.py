@@ -48,7 +48,10 @@ def _build_model(args):
     policy = QuantPolicy(num_layers=n_units, mode="int", last_k_int4=k4)
     plan = ExecutionPlan.build(cfg, policy, backend=args.backend,
                                kv_bits=args.kv_bits,
-                               prefill_mode=args.prefill_mode)
+                               prefill_mode=args.prefill_mode,
+                               prefix_cache=int(args.prefix_cache_mb
+                                                * (1 << 20)),
+                               prefill_batch=args.prefill_batch)
     params = api.init_model(cfg, jax.random.PRNGKey(0))
     return deploy(params, plan)
 
@@ -78,6 +81,20 @@ def main(argv=None):
                         "fp rows; 8/4 store packed codes + per-(token, head) "
                         "scales and decode via the fused Pallas "
                         "decode-attention kernel with --backend pallas")
+    p.add_argument("--prefix-cache-mb", type=float, default=0.0,
+                   help="shared-prefix KV reuse budget in MiB (DESIGN.md "
+                        "§11): cached quantized prefix rows scatter into "
+                        "new slots and only the prompt suffix prefills; "
+                        "0 disables")
+    p.add_argument("--prefill-batch", type=int, default=1,
+                   help="group up to N same-bucket admissions into one "
+                        "batch-N prefill forward (compiled per (bucket, n), "
+                        "n padded to a power of two); 1 keeps serial "
+                        "prefills")
+    p.add_argument("--shared-prefix", type=int, default=0, metavar="T",
+                   help="give every synthetic burst request the same "
+                        "T-token prompt prefix (demo workload for "
+                        "--prefix-cache-mb)")
     p.add_argument("--temperature", type=float, default=0.0,
                    help="sampling temperature (0 = greedy argmax, the "
                         "legacy path)")
@@ -128,12 +145,15 @@ def main(argv=None):
                 if args.stream else None)
 
     rng = np.random.default_rng(0)
+    shared = rng.integers(1, cfg.vocab_size,
+                          args.shared_prefix).astype(np.int32)
     t0 = time.time()
     steps = 0
     for _ in range(args.requests):
         plen = int(rng.integers(4, 12))
+        tail = rng.integers(1, cfg.vocab_size, plen).astype(np.int32)
         req = GenerationRequest(
-            prompt=rng.integers(1, cfg.vocab_size, plen).astype(np.int32),
+            prompt=np.concatenate([shared, tail]),
             max_new_tokens=8, sampling=sampling, stop_tokens=stop)
         while True:
             try:

@@ -11,11 +11,14 @@ The deployment side of the paper, grown into a real package:
   table, continuous-batching refill
 * ``kv_cache``   — slot-state manager (per-layer KV cache, per-slot lengths,
   optional int8/int4 quantization with per-(token, head) scales — DESIGN.md §8)
+* ``prefix_cache`` — refcounted, LRU-evicted, byte-budgeted store of
+  quantized KV prefix blocks for shared-prefix reuse (DESIGN.md §11)
 * ``engine``     — prefill/decode-separated step loop over the deployed
-  model; ``engine_step()`` is the public pump, ``cancel(rid)`` frees a slot
-  and its KV state mid-flight
+  model (batched bucketed prefill, prefix reuse); ``engine_step()`` is the
+  public pump, ``cancel(rid)`` frees a slot and its KV state mid-flight
 * ``metrics``    — latency/throughput recorder (tokens/sec, p50/p99 steps,
-  TTFT and queue-wait percentiles)
+  TTFT and queue-wait percentiles, prefix hit rate; bounded windows +
+  ``pop_summary()`` drain)
 
 ``launch/serve.py`` is a thin CLI shim over this package. The engine
 consumes a ``repro.deploy`` DeployedModel (or raw params + ExecutionPlan) —
@@ -30,8 +33,10 @@ from .api import (FINISH_REASONS, GenerationRequest, GenerationResult,
 from .engine import ServingEngine
 from .kv_cache import SlotKVCache
 from .metrics import ServeMetrics
+from .prefix_cache import PrefixCache
 from .scheduler import Scheduler
 
 __all__ = ["FINISH_REASONS", "GenerationRequest", "GenerationResult",
-           "QueueFullError", "Request", "SamplingParams", "Scheduler",
-           "ServeMetrics", "ServingEngine", "SlotKVCache", "TokenStream"]
+           "PrefixCache", "QueueFullError", "Request", "SamplingParams",
+           "Scheduler", "ServeMetrics", "ServingEngine", "SlotKVCache",
+           "TokenStream"]

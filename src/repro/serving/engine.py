@@ -1,13 +1,17 @@
 """Serving engine: prefill/decode-separated step loop (DESIGN.md §7) behind
-the streaming generation API (DESIGN.md §10).
+the streaming generation API (DESIGN.md §10), with shared-prefix KV reuse and
+batched bucketed prefill (DESIGN.md §11).
 
 Two-phase execution over a deployed model (``repro.deploy.DeployedModel``, or
 a raw params tree plus its ``ExecutionPlan``):
 
-* **prefill** — a newly admitted request's whole prompt runs in ONE forward
-  (batch 1, prompt padded to a power-of-two bucket to bound recompiles); the
-  resulting per-layer KV rows are scattered into the request's slot and the
-  first output token falls out of the same pass.
+* **prefill** — admissions are grouped by (bucket, cached-prefix) and each
+  group runs as ONE batch-N forward (``plan.prefill_batch`` caps N; N pads to
+  a power of two so the compile-key space stays (bucket, n)). With
+  ``plan.prefix_cache`` enabled, the longest cached block-aligned prefix is
+  scattered into the slot — quantized codes + scales copy directly — and
+  only the suffix is computed, block-chunked so the rows a cold run attends
+  to are bit-equal to the rows a hit copies out of the cache.
 * **decode** — one token per step for every occupied slot, batched across the
   slot table with per-slot cache cursors (kv_cache.SlotKVCache).
 
@@ -15,19 +19,24 @@ Both phases sample through ONE jitted step: the legacy per-batch ``argmax``
 is the ``temperature=0`` case of ``api.sample_batch``, which threads per-slot
 (seed, step, temperature, top_k, top_p) vectors alongside the decode state so
 a request's tokens are a function of (prompt, seed) only — never of which
-other requests share the batch.
+other requests share the batch (or the prefill group).
 
 ``engine_step()`` is the public pump: one admit → prefill → batched-decode
 round, returning the ``(rid, token)`` pairs it emitted (``TokenStream``
 handles are fed from inside it). ``run_until_drained`` is a loop over it and
 raises when ``max_steps`` strands work. ``cancel(rid)`` frees a queued entry
-or an occupied slot (KV state reset) mid-flight.
+or an occupied slot (KV state reset) mid-flight; every slotted exit funnels
+through one finalize helper, so cancel and complete truncate output
+identically.
 
 Everything configuration-shaped — segments, kernel selection, KV precision,
-prefill mode, decode dtype, default sampling — comes from the plan; the
-engine itself only owns slots, max_len and the step loop. Families without a
-{'k','v','len'} decode cache (xlstm, hybrid, encdec) run
-``prefill_mode='token'``: the seed semantics with a shared cursor.
+prefill mode, decode dtype, default sampling, prefix/batch prefill knobs —
+comes from the plan; the engine itself only owns slots, max_len and the step
+loop. Families without a {'k','v','len'} decode cache (xlstm, hybrid,
+encdec) run ``prefill_mode='token'``: the seed semantics with a shared
+cursor, now guarded against cursor exhaustion (admission is refused until
+the cursor fits the request; an idle engine resets its state instead of
+silently clamping KV writes past max_len).
 """
 from __future__ import annotations
 
@@ -39,12 +48,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..deploy import DeployedModel, ExecutionPlan
+from ..kernels.kv_pack import kv_buffer_keys
 from ..models import api as model_api
 from .api import (GenerationRequest, SamplingParams, TokenStream,
                   sample_batch, sample_token)
 from .kv_cache import SlotKVCache
 from .metrics import ServeMetrics
-from .scheduler import Request, Scheduler  # noqa: F401  (compat re-export)
+from .prefix_cache import PrefixCache
+from .scheduler import Request, Scheduler, group_admits  # noqa: F401 (compat)
 
 
 def _bucket_for(plen: int, max_len: int, min_bucket: int = 8) -> int:
@@ -52,6 +63,10 @@ def _bucket_for(plen: int, max_len: int, min_bucket: int = 8) -> int:
     while b < plen:
         b *= 2
     return min(b, max_len)
+
+
+def _pow2_ceil(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
 
 
 class ServingEngine:
@@ -86,6 +101,7 @@ class ServingEngine:
         self.dtype = plan.jnp_dtype           # the ONE serving decode dtype
         self.kv_bits = plan.kv_bits
         self.prefill_mode = plan.prefill_mode
+        self.prefill_batch = max(1, plan.prefill_batch)
         self.default_sampling = (plan.default_sampling
                                  if plan.default_sampling is not None
                                  else SamplingParams())
@@ -102,14 +118,20 @@ class ServingEngine:
         self._topk = np.zeros(slots, np.int32)
         self._topp = np.ones(slots, np.float32)
 
+        self.prefix_cache: Optional[PrefixCache] = None
+        self._prefix_refs: dict[int, tuple] = {}   # rid -> pinned block keys
         if self.prefill_mode == "chunked":
             self.kv = SlotKVCache.from_plan(plan, slots, max_len)
             self.state = None
-            self._prefill_fns: dict[int, callable] = {}
+            self._prefill_fns: dict[tuple, callable] = {}
+            self._chunk_fns: dict[tuple, callable] = {}
+            if plan.prefix_cache:
+                self.prefix_cache = PrefixCache(plan.prefix_cache)
         else:
             self.kv = None
             self.state = plan.decode_state(slots, max_len)
             self.pos = np.zeros(slots, np.int32)   # per-slot prompt cursor
+            self._cursor = 0   # host mirror of the SHARED token-mode cursor
 
         def step(params, state, tokens, seeds, steps, temps, top_ks, top_ps):
             logits, new_state, _, _ = model_api.forward(
@@ -139,8 +161,9 @@ class ServingEngine:
             # past max_len the cache writes clamp or drop silently — decode
             # would keep emitting tokens that cannot see recent context.
             # (xlstm state is recurrent: no positional cache to overflow.
-            # Token mode's shared cursor makes this necessary, not
-            # sufficient — inherited seed semantics.)
+            # Token mode's shared cursor additionally gates ADMISSION on the
+            # live cursor — see _token_fits — so steady-state slot refills
+            # can no longer walk the cursor past max_len.)
             raise ValueError(
                 f"request {req.rid}: prompt ({plen}) + max_new_tokens "
                 f"({req.max_new_tokens}) exceeds engine max_len "
@@ -161,21 +184,18 @@ class ServingEngine:
         """Cancel a queued or mid-flight request. An occupied slot is freed
         immediately — its KV rows are zeroed and its cursor rewound — so the
         next ``engine_step`` can admit queued work into it. Tokens already
-        generated stay on ``req.out``; ``finish_reason`` becomes
-        ``'cancelled'``. Returns False when ``rid`` is unknown or already
-        finished."""
+        generated stay on ``req.out`` (truncated to ``max_new_tokens``, like
+        every other exit); ``finish_reason`` becomes ``'cancelled'``.
+        Returns False when ``rid`` is unknown or already finished."""
         req = self.scheduler.cancel(rid)
         if req is not None:                      # still queued: never ran
             self._finalize_unslotted(req, "cancelled")
             return True
         for s, req in enumerate(self.scheduler.active):
             if req is not None and req.rid == rid:
-                req.out = np.array(self.generated[s], np.int32)
-                req.finish_reason = "cancelled"
-                self.scheduler.complete(s)
+                self._finalize_slotted(s, req, "cancelled")
                 if self.kv is not None:
                     self.kv.reset_slot(s)        # free the KV state now
-                self._close_stream(req)
                 return True
         return False
 
@@ -224,11 +244,15 @@ class ServingEngine:
         return self._events
 
     # ------------------------------------------------------------ lifecycle
-    def _admit(self) -> list[tuple[int, "GenerationRequest"]]:
+    def _admit(self, fits: Optional[Callable] = None
+               ) -> list[tuple[int, "GenerationRequest"]]:
         """Scheduler admit + per-slot sampling-state install + queue-wait
-        metric."""
-        placed = self.scheduler.admit()
+        metric. Clears the slot's stale token tally up front, so a cancel
+        landing between admission and prefill cannot report the previous
+        occupant's tokens."""
+        placed = self.scheduler.admit(fits=fits)
         for s, req in placed:
+            self.generated[s] = []
             sp = req.sampling
             self._seed[s] = np.int32(sp.seed & 0x7FFFFFFF)
             self._temp[s] = sp.temperature
@@ -253,6 +277,11 @@ class ServingEngine:
         if stream is not None:
             stream._finish()
 
+    def _release_prefix(self, req: GenerationRequest) -> None:
+        keys = self._prefix_refs.pop(req.rid, None)
+        if keys and self.prefix_cache is not None:
+            self.prefix_cache.release(keys)
+
     def _finalize_unslotted(self, req: GenerationRequest,
                             reason: str) -> None:
         """Finish a request that never occupied a slot (queued-cancel or
@@ -260,60 +289,199 @@ class ServingEngine:
         req.out = np.zeros(0, np.int32)
         req.finish_reason = reason
         self.scheduler.done.append(req)
+        self._release_prefix(req)
+        self._close_stream(req)
+
+    def _finalize_slotted(self, slot: int, req: GenerationRequest,
+                          reason: str) -> None:
+        """The ONE exit path for slotted requests (length/stop/cancel):
+        output truncated to the request's own ``max_new_tokens``, slot
+        returned to the scheduler, prefix pins released, stream closed."""
+        req.out = np.array(self.generated[slot][:req.max_new_tokens],
+                           np.int32)
+        req.finish_reason = reason
+        self.scheduler.complete(slot)
+        self._release_prefix(req)
         self._close_stream(req)
 
     def _maybe_complete(self, slot: int, req: GenerationRequest) -> None:
         toks = self.generated[slot]
         if toks and toks[-1] in req.stop_tokens:
-            self._complete(slot, req, "stop")    # stop token stays in out
+            self._finalize_slotted(slot, req, "stop")  # stop token stays
         elif len(toks) >= req.max_new_tokens:
-            self._complete(slot, req, "length")
-
-    def _complete(self, slot: int, req: GenerationRequest,
-                  reason: str) -> None:
-        req.out = np.array(self.generated[slot][:req.max_new_tokens],
-                           np.int32)
-        req.finish_reason = reason
-        self.scheduler.complete(slot)
-        self._close_stream(req)
+            self._finalize_slotted(slot, req, "length")
 
     # ------------------------------------------------------------- chunked
-    def _prefill_fn(self, bucket: int):
-        """Batch-1 full-prompt forward, compiled once per bucket size."""
-        fn = self._prefill_fns.get(bucket)
+    def _prefill_fn(self, bucket: int, n: int):
+        """Batch-n full-prompt forward on an fp scratch cache, compiled once
+        per (bucket, n) — n is the power-of-two padded group size."""
+        fn = self._prefill_fns.get((bucket, n))
         if fn is None:
             cfg, segments, plan = self.cfg, self.segments, self.plan
 
             def pf(params, tokens):
                 # prefill always runs on the fp cache regardless of
                 # plan.kv_bits; quantization happens on slot insert
-                st = plan.decode_state(1, bucket, kv_bits=16)
+                st = plan.decode_state(n, bucket, kv_bits=16)
                 logits, st2, _, _ = model_api.forward(
                     params, cfg, segments, state=st, tokens=tokens)
                 return logits, st2
 
-            fn = self._prefill_fns[bucket] = jax.jit(pf)
+            fn = self._prefill_fns[(bucket, n)] = jax.jit(pf)
         return fn
 
-    def _prefill_into_slot(self, slot: int, req: GenerationRequest) -> None:
-        plen = len(req.prompt)
-        assert plen > 0, f"request {req.rid}: empty prompt past submit()"
-        bucket = _bucket_for(plen, self.max_len)
-        toks = np.zeros((1, bucket), np.int32)
-        toks[0, :plen] = req.prompt
+    def _chunk_fn(self, scratch_len: int, n: int):
+        """One prefix-block forward over the plan-precision scratch cache
+        (DESIGN.md §11), compiled once per (scratch_len, n) — scratch_len is
+        the bucket rounded up to the block grid, so the key space matches
+        the bucket ladder. Suffix tokens attend the quantized rows of every
+        EARLIER block (exactly what a prefix hit restores) and fp rows
+        within their own block; the new block's rows quantize on append via
+        models/transformer.write_new_kv."""
+        fn = self._chunk_fns.get((scratch_len, n))
+        if fn is None:
+            cfg, segments = self.cfg, self.segments
+
+            def cf(params, state, tokens):
+                logits, st2, _, _ = model_api.forward(
+                    params, cfg, segments, state=state, tokens=tokens)
+                return logits, st2
+
+            fn = self._chunk_fns[(scratch_len, n)] = jax.jit(
+                cf, donate_argnums=(1,))
+        return fn
+
+    def _sample_first(self, logits_row, slot: int) -> int:
+        return int(np.asarray(self._sample1(
+            logits_row, self._seed[slot], np.int32(0), self._temp[slot],
+            self._topk[slot], self._topp[slot])))
+
+    def _emit_first_tokens(self, group, firsts) -> None:
+        for (s, req), first in zip(group, firsts):
+            if self.scheduler.active[s] is not req:
+                continue   # an earlier emit's callback cancelled it
+            self.generated[s] = [first]
+            self._emit(req, first)
+            if self.scheduler.active[s] is req:   # ... or a self-cancel
+                self._maybe_complete(s, req)
+
+    def _prefill_admitted(self, placed) -> None:
+        """Group this round's admissions and prefill each group in one
+        forward. The group key is (bucket, prefix-hit length, prefix block
+        keys): same-bucket requests sharing a cached prefix (or sharing
+        none) batch together; ``prefill_batch`` caps the group size."""
+        jobs = []
+        for s, req in placed:
+            plen = len(req.prompt)
+            bucket = _bucket_for(plen, self.max_len)
+            m, keys = 0, ()
+            if self.prefix_cache is not None:
+                m, keys = self.prefix_cache.match(req.prompt)
+                self._prefix_refs[req.rid] = keys
+                self.metrics.record_prefix(m, plen)
+            jobs.append((s, req, bucket, m, keys))
+        groups = group_admits(jobs, key_fn=lambda j: (j[2], j[3], j[4]),
+                              max_batch=self.prefill_batch)
+        for (bucket, m, keys), members in groups:
+            group = [(s, req) for s, req, *_ in members
+                     if self.scheduler.active[s] is req]
+            if not group:      # cancelled by a callback mid-round
+                continue
+            if self.prefix_cache is not None:
+                self._prefill_group_blocks(bucket, m, keys, group)
+            else:
+                self._prefill_group(bucket, group)
+
+    def _prefill_group(self, bucket: int, group) -> None:
+        """One batch-n fp forward covering every request in ``group``; each
+        request's first token samples from its own logits row and its KV
+        rows scatter (quantize-on-insert) into its own slot."""
+        n = _pow2_ceil(len(group))
+        toks = np.zeros((n, bucket), np.int32)
+        for i, (s, req) in enumerate(group):
+            toks[i, :len(req.prompt)] = req.prompt
         t0 = time.perf_counter()
-        logits, pstate = self._prefill_fn(bucket)(
-            self.params, jnp.asarray(toks))
-        first = int(np.asarray(self._sample1(
-            logits[0, plen - 1], self._seed[slot], np.int32(0),
-            self._temp[slot], self._topk[slot], self._topp[slot])))
-        self.kv.reset_slot(slot)
-        self.kv.insert_prefill(slot, pstate, plen, bucket)
-        self.metrics.record("prefill", time.perf_counter() - t0, plen)
-        self.generated[slot] = [first]
-        self._emit(req, first)
-        if self.scheduler.active[slot] is req:   # callback may have cancelled
-            self._maybe_complete(slot, req)
+        logits, pstate = self._prefill_fn(bucket, n)(self.params,
+                                                     jnp.asarray(toks))
+        firsts = []
+        total = 0
+        for i, (s, req) in enumerate(group):
+            plen = len(req.prompt)
+            total += plen
+            firsts.append(self._sample_first(logits[i, plen - 1], s))
+            self.kv.reset_slot(s)
+            self.kv.insert_prefill(s, pstate, plen, bucket, row=i)
+        self.metrics.record("prefill", time.perf_counter() - t0, total)
+        self._emit_first_tokens(group, firsts)
+
+    def _prefill_group_blocks(self, bucket: int, m: int, keys, group) -> None:
+        """Prefix-reuse prefill (DESIGN.md §11): restore the ``m`` cached
+        prefix tokens (codes + scales copy straight into the scratch cache,
+        no requantization) and compute only the suffix, one prefix block per
+        forward so hit and cold runs attend bit-identical rows."""
+        B = self.prefix_cache.block
+        n = _pow2_ceil(len(group))
+        t0 = time.perf_counter()
+        # scratch capacity on the BLOCK grid: a bucket capped at a
+        # non-multiple-of-B max_len would make the last chunk's write run
+        # past the buffer, where dynamic_update_slice clamps the start and
+        # silently overwrites real rows with padding. Rounding up keeps
+        # every chunk write in-bounds; the slot insert below copies only the
+        # first min(S, max_len) rows back out.
+        S = -(-bucket // B) * B
+        state = self.plan.decode_state(n, S)
+        if m:
+            rows = self.prefix_cache.gather(keys)
+            state = {key: (val if key == "len" else
+                           val.at[:, :, :m].set(jnp.asarray(rows[key])[:,
+                                                                       None]))
+                     for key, val in state.items()}
+            state["len"] = jnp.asarray(m, jnp.int32)
+        max_plen = max(len(req.prompt) for _, req in group)
+        n_chunks = -(-(max_plen - m) // B)
+        toks = np.zeros((n, n_chunks * B), np.int32)
+        for i, (s, req) in enumerate(group):
+            toks[i, :len(req.prompt) - m] = req.prompt[m:]
+        first_logits = [None] * len(group)
+        fn = self._chunk_fn(S, n)
+        for c in range(n_chunks):
+            logits, state = fn(self.params, state,
+                               jnp.asarray(toks[:, c * B:(c + 1) * B]))
+            for i, (s, req) in enumerate(group):
+                ci, pi = divmod(len(req.prompt) - 1 - m, B)
+                if ci == c:    # this chunk holds the request's last token
+                    first_logits[i] = logits[i, pi]
+        firsts = []
+        total = 0
+        copy = min(S, self.max_len)     # slot rows past plen stay masked
+        for i, (s, req) in enumerate(group):
+            plen = len(req.prompt)
+            total += plen - m
+            firsts.append(self._sample_first(first_logits[i], s))
+            self.kv.reset_slot(s)
+            self.kv.insert_rows(s, state, plen, copy, row=i)
+            self._publish_prefix(req, m, state, i)
+        self.metrics.record("prefill", time.perf_counter() - t0, total)
+        self._emit_first_tokens(group, firsts)
+
+    def _publish_prefix(self, req: GenerationRequest, m: int, state,
+                        row: int) -> None:
+        """Insert the request's newly computed full blocks into the prefix
+        cache (lazy device→host copy: hits never pay it)."""
+        plen = len(req.prompt)
+        upto = (plen // self.prefix_cache.block) * self.prefix_cache.block
+        if upto <= m:
+            return
+        buf_keys = kv_buffer_keys(self.kv.kv_bits)
+        host: dict = {}
+
+        def rows_for_block(lo, hi):
+            if not host:
+                host.update({key: np.asarray(state[key][:, row])
+                             for key in buf_keys})
+            return {key: host[key][:, lo:hi].copy() for key in buf_keys}
+
+        self.prefix_cache.insert(req.prompt, upto, rows_for_block)
 
     def _gen_steps(self) -> np.ndarray:
         """Per-slot index of the NEXT generated token (the sampling step fed
@@ -323,10 +491,9 @@ class ServingEngine:
                         np.int32)
 
     def _chunked_step(self) -> None:
-        for s, req in self._admit():
-            if self.scheduler.active[s] is not req:
-                continue   # an earlier prefill's on_token callback cancelled
-            self._prefill_into_slot(s, req)
+        placed = self._admit()
+        if placed:
+            self._prefill_admitted(placed)
         active = self.scheduler.active_slots()
         if not active:
             return
@@ -350,15 +517,41 @@ class ServingEngine:
                 self._maybe_complete(s, req)
 
     # --------------------------------------------------------------- token
+    def _token_fits(self, req: GenerationRequest) -> bool:
+        """Token mode shares ONE cache cursor across slots: a request
+        admitted at cursor c consumes positions [c, c + plen + max_new), so
+        it fits iff that span ends inside max_len."""
+        return (self._cursor + len(req.prompt) + req.max_new_tokens
+                <= self.max_len)
+
     def _token_step(self) -> None:
         """Seed semantics: prompts fed one token per batched step (global
-        cache cursor; used by families without a KV slot cache)."""
-        for s, _req in self._admit():
-            self.generated[s] = []
+        cache cursor; used by families without a KV slot cache). The shared
+        cursor only advances — so admission is gated on the LIVE cursor
+        (submit's per-request check is necessary, not sufficient), and an
+        idle engine resets its decode state instead of admitting work whose
+        KV writes would silently clamp past max_len."""
+        fits = None
+        if self.cfg.family != "xlstm":   # recurrent state: nothing to exhaust
+            fits = self._token_fits
+            head = self.scheduler.peek()
+            if (head is not None and self.scheduler.num_active == 0
+                    and self._cursor > 0 and not fits(head)):
+                # drained but the cursor is spent: fresh state, cursor 0.
+                # submit() guarantees every queued request fits from there.
+                self.state = self.plan.decode_state(self.slots, self.max_len)
+                self._cursor = 0
+        for s, _req in self._admit(fits=fits):
             self.pos[s] = 0
         active = self.scheduler.active_slots()
         if not active:
             return
+        if self.cfg.family != "xlstm" and self._cursor >= self.max_len:
+            raise RuntimeError(
+                f"token-mode cache cursor exhausted mid-flight (cursor "
+                f"{self._cursor} >= max_len {self.max_len}) with "
+                f"{len(active)} active request(s) — admission gating "
+                "should have prevented this")
         toks = np.zeros((self.slots, 1), np.int32)
         for s in active:
             req = self.scheduler.active[s]
@@ -372,6 +565,7 @@ class ServingEngine:
             self._seed, self._gen_steps(), self._temp, self._topk,
             self._topp)
         next_tok = np.asarray(next_tok)
+        self._cursor += 1
         # a slot emits a generated token this step once it has consumed its
         # last prompt token, i.e. pos >= plen - 1 before the increment
         n_decoding = sum(

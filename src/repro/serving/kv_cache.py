@@ -30,7 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ModelConfig
-from ..kernels.kv_pack import quantize_kv
+from ..kernels.kv_pack import kv_buffer_keys, quantize_kv
 from ..models import api
 
 
@@ -41,31 +41,55 @@ def _reset(state, slot):
             for key, val in state.items()}
 
 
+def _take_row(pstate, key, row):
+    """One batch row of a (possibly batch-N) prefill/scratch cache buffer:
+    (L, n, bucket, ...) -> (L, bucket, ...)."""
+    return jax.lax.dynamic_index_in_dim(pstate[key], row, 1, keepdims=False)
+
+
 @functools.partial(jax.jit, donate_argnums=(0,),
                    static_argnames=("bucket",))
-def _insert(state, pstate, slot, length, bucket: int):
-    """Scatter a batch-1 prefill cache (L, 1, bucket, H, hd) into ``slot``.
+def _insert(state, pstate, slot, length, bucket: int, row):
+    """Scatter row ``row`` of a batch-N prefill cache (L, n, bucket, H, hd)
+    into ``slot``.
 
     Rows past ``length`` hold prompt padding; they stay masked (pos >= len)
     and are overwritten by subsequent decode writes at the slot cursor.
     """
-    return {"k": state["k"].at[:, slot, :bucket].set(pstate["k"][:, 0]),
-            "v": state["v"].at[:, slot, :bucket].set(pstate["v"][:, 0]),
+    return {"k": state["k"].at[:, slot, :bucket].set(
+                _take_row(pstate, "k", row)),
+            "v": state["v"].at[:, slot, :bucket].set(
+                _take_row(pstate, "v", row)),
             "len": state["len"].at[slot].set(length)}
 
 
 @functools.partial(jax.jit, donate_argnums=(0,),
                    static_argnames=("bucket", "bits"))
-def _insert_quant(state, pstate, slot, length, bucket: int, bits: int):
+def _insert_quant(state, pstate, slot, length, bucket: int, bits: int, row):
     """Quantize-on-insert: the fp prefill rows become packed codes plus
     per-(token, head) scales as they scatter into ``slot``."""
-    kq, ks = quantize_kv(pstate["k"][:, 0], bits)   # (L, bucket, Hkv, *)
-    vq, vs = quantize_kv(pstate["v"][:, 0], bits)
+    kq, ks = quantize_kv(_take_row(pstate, "k", row), bits)  # (L,bucket,H,*)
+    vq, vs = quantize_kv(_take_row(pstate, "v", row), bits)
     return {"k_q": state["k_q"].at[:, slot, :bucket].set(kq),
             "v_q": state["v_q"].at[:, slot, :bucket].set(vq),
             "k_scale": state["k_scale"].at[:, slot, :bucket].set(ks),
             "v_scale": state["v_scale"].at[:, slot, :bucket].set(vs),
             "len": state["len"].at[slot].set(length)}
+
+
+@functools.partial(jax.jit, donate_argnums=(0,),
+                   static_argnames=("bucket", "keys"))
+def _copy_rows(state, src, slot, length, bucket: int, keys: tuple, row):
+    """Direct same-layout scatter: row ``row`` of a scratch cache whose
+    buffers already match the slot table's precision (quantized codes +
+    scales, or fp rows) copies into ``slot`` — no requantization. The
+    scratch may hold MORE than ``bucket`` token rows (block-grid rounding);
+    only the first ``bucket`` copy."""
+    out = {key: state[key].at[:, slot, :bucket].set(
+              _take_row(src, key, row)[:, :bucket])
+           for key in keys}
+    out["len"] = state["len"].at[slot].set(length)
+    return out
 
 
 class SlotKVCache:
@@ -100,18 +124,30 @@ class SlotKVCache:
         self.state = _reset(self.state, jnp.int32(slot))
 
     def insert_prefill(self, slot: int, pstate, length: int,
-                       bucket: int) -> None:
-        """Install a prefilled batch-1 fp cache (allocated with
-        max_len=bucket) into ``slot`` with the slot cursor at ``length``,
-        quantizing the rows on the way in when kv_bits < 16."""
+                       bucket: int, row: int = 0) -> None:
+        """Install row ``row`` of a prefilled batch-N fp cache (allocated
+        with max_len=bucket) into ``slot`` with the slot cursor at
+        ``length``, quantizing the rows on the way in when kv_bits < 16."""
         assert bucket <= self.max_len, (bucket, self.max_len)
         if self.quantized:
             self.state = _insert_quant(self.state, pstate, jnp.int32(slot),
                                        jnp.int32(length), bucket,
-                                       self.kv_bits)
+                                       self.kv_bits, jnp.int32(row))
         else:
             self.state = _insert(self.state, pstate, jnp.int32(slot),
-                                 jnp.int32(length), bucket)
+                                 jnp.int32(length), bucket, jnp.int32(row))
+
+    def insert_rows(self, slot: int, src, length: int, bucket: int,
+                    row: int = 0) -> None:
+        """Install row ``row`` of a scratch cache that ALREADY matches this
+        table's precision (the prefix-reuse chunked-prefill path, DESIGN.md
+        §11): quantized codes + per-(token, head) scales — or fp rows at
+        kv_bits=16 — copy directly, no requantization."""
+        assert bucket <= self.max_len, (bucket, self.max_len)
+        keys = kv_buffer_keys(self.kv_bits)
+        self.state = _copy_rows(self.state, src, jnp.int32(slot),
+                                jnp.int32(length), bucket, keys,
+                                jnp.int32(row))
 
     def lengths(self) -> np.ndarray:
         return np.asarray(self.state["len"])

@@ -1,4 +1,4 @@
-"""Latency/throughput recorder for the serving engine (DESIGN.md §7/§10).
+"""Latency/throughput recorder for the serving engine (DESIGN.md §7/§10/§11).
 
 Records (kind, seconds, tokens) step events — kind is 'prefill' or 'decode'
 — plus per-request wait samples ('ttft': submit → first emitted token,
@@ -7,15 +7,32 @@ step latency per kind and p50/p99 of the per-request waits. Wait samples are
 kept OUT of the busy-time denominator — queueing is not compute, so it must
 not deflate tokens/sec. Pure host-side bookkeeping; never touches device
 state.
+
+Memory discipline: a long-lived engine records events forever, so the raw
+sample lists are bounded deques (``window`` samples per stream, default
+65536; ``None`` keeps everything for offline analysis). Percentiles and
+tokens/sec then describe the most recent window. ``pop_summary()`` is the
+drain form — summarize-and-reset, the same non-leaking consumption pattern
+as ``Scheduler.pop_done()`` — and is what ``benchmarks/serve_latency`` uses
+between bursts.
+
+Prefix-cache counters (DESIGN.md §11) are plain integers (never grow):
+``record_prefix(reused, prompt_tokens)`` per admission feeds the
+``prefix_hit_rate`` / ``prefill_tokens_saved`` summary keys.
 """
 from __future__ import annotations
 
 import time
+from collections import deque
+from typing import Optional
 
 import numpy as np
 
 #: per-request wait kinds recorded via ``record_wait``
 WAIT_KINDS = ("ttft", "queue_wait")
+
+#: default bounded-window length (samples kept per stream)
+DEFAULT_WINDOW = 65536
 
 
 def _pcts(lat: np.ndarray) -> tuple[float, float]:
@@ -29,10 +46,18 @@ def _pcts(lat: np.ndarray) -> tuple[float, float]:
 
 
 class ServeMetrics:
-    def __init__(self):
-        self._events: list[tuple[str, float, int]] = []
-        self._waits: list[tuple[str, float]] = []
+    def __init__(self, window: Optional[int] = DEFAULT_WINDOW):
+        self.window = window
+        self._reset()
+
+    def _reset(self) -> None:
+        self._events: deque = deque(maxlen=self.window)
+        self._waits: deque = deque(maxlen=self.window)
         self._t0 = time.perf_counter()
+        self._prefix_lookups = 0
+        self._prefix_hits = 0
+        self._prefix_reused = 0
+        self._prefix_prompt_tokens = 0
 
     def record(self, kind: str, seconds: float, tokens: int) -> None:
         self._events.append((kind, seconds, tokens))
@@ -41,6 +66,15 @@ class ServeMetrics:
         """Per-request wait sample: 'ttft' or 'queue_wait'."""
         assert kind in WAIT_KINDS, kind
         self._waits.append((kind, seconds))
+
+    def record_prefix(self, reused: int, prompt_tokens: int) -> None:
+        """One admission's prefix-cache outcome: ``reused`` prompt tokens
+        restored from cache out of ``prompt_tokens`` total."""
+        self._prefix_lookups += 1
+        if reused > 0:
+            self._prefix_hits += 1
+        self._prefix_reused += reused
+        self._prefix_prompt_tokens += prompt_tokens
 
     def _kind(self, kind: str) -> tuple[np.ndarray, int]:
         lat = np.array([s for k, s, _ in self._events if k == kind])
@@ -72,6 +106,20 @@ class ServeMetrics:
             out[f"{kind}_n"] = len(lat)
             out[f"{kind}_p50_ms"] = p50
             out[f"{kind}_p99_ms"] = p99
+        if self._prefix_lookups:
+            out["prefix_lookups"] = self._prefix_lookups
+            out["prefix_hit_rate"] = self._prefix_hits / self._prefix_lookups
+            out["prefill_tokens_saved"] = self._prefix_reused
+            out["prefix_reuse_frac"] = (
+                self._prefix_reused / max(self._prefix_prompt_tokens, 1))
+        return out
+
+    def pop_summary(self) -> dict:
+        """Summarize-and-reset: the bounded-memory way to consume metrics
+        from a long-lived engine (windows, counters and the wall clock all
+        restart)."""
+        out = self.summary()
+        self._reset()
         return out
 
     def report(self) -> str:
@@ -88,4 +136,8 @@ class ServeMetrics:
                 parts.append(
                     f"{kind}: p50 {s[f'{kind}_p50_ms']:.1f}ms "
                     f"p99 {s[f'{kind}_p99_ms']:.1f}ms")
+        if "prefix_hit_rate" in s:
+            parts.append(
+                f"prefix: {s['prefix_hit_rate']:.0%} hit, "
+                f"{s['prefill_tokens_saved']} tok saved")
         return " | ".join(parts)

@@ -63,12 +63,36 @@ class Scheduler:
     def submit(self, req: GenerationRequest) -> GenerationRequest:
         self.assign_id(req)
         if self.max_queue is not None and self.queue_depth >= self.max_queue:
+            # deadline-expired entries waiting for a slot are already dead —
+            # shed them NOW instead of letting them hold queue_depth and
+            # bounce live traffic with QueueFullError (they used to be shed
+            # only inside admit(), which never runs while every slot is busy)
+            self._shed_expired()
+        if self.max_queue is not None and self.queue_depth >= self.max_queue:
             raise QueueFullError(
                 f"request {req.rid}: queue full ({self.queue_depth}/"
                 f"{self.max_queue} pending) — retry or raise max_queue")
         req.submit_t = self._clock()
         heapq.heappush(self._heap, (-req.priority, next(self._seq), req))
         return req
+
+    def _expired(self, req: GenerationRequest, now: float) -> bool:
+        return (req.deadline_s is not None and req.submit_t is not None
+                and now - req.submit_t > req.deadline_s)
+
+    def _shed_expired(self) -> int:
+        """Move every deadline-expired queued request into ``pop_shed()``;
+        returns how many were shed. The engine finalizes them on its next
+        step."""
+        now = self._clock()
+        keep = [item for item in self._heap if not self._expired(item[2], now)]
+        shed = len(self._heap) - len(keep)
+        if shed:
+            self._shed.extend(item[2] for item in self._heap
+                              if self._expired(item[2], now))
+            self._heap = keep
+            heapq.heapify(self._heap)
+        return shed
 
     def cancel(self, rid: int) -> Optional[GenerationRequest]:
         """Cancel a QUEUED request: the heap entry is removed EAGERLY (a
@@ -84,19 +108,29 @@ class Scheduler:
                 return req
         return None
 
-    def admit(self) -> list[tuple[int, GenerationRequest]]:
+    def admit(self, fits: Optional[Callable[[GenerationRequest], bool]] = None
+              ) -> list[tuple[int, GenerationRequest]]:
         """Fill free slots from the queue in priority order; returns the new
         placements. Requests whose deadline elapsed are shed into
-        ``pop_shed()`` instead of placed."""
+        ``pop_shed()`` instead of placed.
+
+        ``fits`` (optional) is an engine-side capacity predicate checked
+        against the HIGHEST-priority pending request before it is popped:
+        admission stops at the first request that does not fit (it stays
+        queued, in order), letting token-mode engines refuse admission when
+        the shared cache cursor cannot cover prompt + max_new_tokens."""
         placed = []
         now = self._clock()
         free = [s for s, r in enumerate(self.active) if r is None]
         while free and self._heap:
-            _, _, req = heapq.heappop(self._heap)
-            if (req.deadline_s is not None and req.submit_t is not None
-                    and now - req.submit_t > req.deadline_s):
+            req = self._heap[0][2]
+            if self._expired(req, now):
+                heapq.heappop(self._heap)
                 self._shed.append(req)
                 continue
+            if fits is not None and not fits(req):
+                break
+            heapq.heappop(self._heap)
             slot = free.pop(0)
             req.admit_t = now
             self.active[slot] = req
@@ -125,6 +159,11 @@ class Scheduler:
         return drained
 
     # ------------------------------------------------------------- queries
+    def peek(self) -> Optional[GenerationRequest]:
+        """The next request ``admit`` would consider (highest priority),
+        without popping it."""
+        return self._heap[0][2] if self._heap else None
+
     @property
     def queue(self) -> list[GenerationRequest]:
         """Pending requests in admission order (a snapshot — the live
@@ -138,7 +177,11 @@ class Scheduler:
 
     @property
     def has_work(self) -> bool:
-        return (self.queue_depth > 0
+        # _shed counts as work: entries shed at submit() time (not just
+        # inside admit()) still need the engine's pop_shed() drain to be
+        # finalized — otherwise an emptied queue could strand them with no
+        # finish_reason and a stream that never resolves
+        return (self.queue_depth > 0 or len(self._shed) > 0
                 or any(r is not None for r in self.active))
 
     @property
@@ -147,3 +190,29 @@ class Scheduler:
 
     def active_slots(self) -> list[int]:
         return [s for s, r in enumerate(self.active) if r is not None]
+
+
+def group_admits(placed: list, key_fn: Callable, max_batch: int
+                 ) -> list[tuple[object, list]]:
+    """Group one admission round's placements for batched prefill.
+
+    Placements with equal ``key_fn(item)`` (the engine keys on (bucket,
+    cached-prefix identity)) batch into ONE prefill forward, chunked to
+    ``max_batch`` rows each. Deterministic: groups appear in first-seen
+    order, items keep their admission order within a group — so a given
+    submit sequence always yields the same batches, and ``max_batch=1``
+    degenerates to the serial one-forward-per-request schedule."""
+    groups: dict = {}
+    order: list = []
+    for item in placed:
+        key = key_fn(item)
+        if key not in groups:
+            groups[key] = []
+            order.append(key)
+        groups[key].append(item)
+    out = []
+    for key in order:
+        members = groups[key]
+        for i in range(0, len(members), max_batch):
+            out.append((key, members[i:i + max_batch]))
+    return out
