@@ -19,6 +19,13 @@ The deployment side of the paper, grown into a real package:
 * ``metrics``    — latency/throughput recorder (tokens/sec, p50/p99 steps,
   TTFT and queue-wait percentiles, prefix hit rate; bounded windows +
   ``pop_summary()`` drain)
+* ``clock``      — the injectable time source every serving component reads
+  (DESIGN.md §12): ``SYSTEM_CLOCK`` (``time.monotonic``) by default, or a
+  deterministic ``VirtualClock`` for simulation tests
+* ``loadgen``    — trace-driven closed-loop load generator (Poisson /
+  recorded-trace arrivals, shared-prefix mix, priorities, deadlines,
+  cancellations) reporting SLO goodput with bootstrap confidence
+  intervals, in wall-clock or virtual-clock mode (DESIGN.md §12)
 
 ``launch/serve.py`` is a thin CLI shim over this package. The engine
 consumes a ``repro.deploy`` DeployedModel (or raw params + ExecutionPlan) —
@@ -30,13 +37,19 @@ shim over ``GenerationRequest``.
 """
 from .api import (FINISH_REASONS, GenerationRequest, GenerationResult,
                   QueueFullError, Request, SamplingParams, TokenStream)
+from .clock import SYSTEM_CLOCK, Clock, VirtualClock
 from .engine import ServingEngine
 from .kv_cache import SlotKVCache
+from .loadgen import (SLO, Arrival, LoadResult, VirtualCost, Workload,
+                      bootstrap_summary, make_arrivals, run_load, run_trials,
+                      trace_arrivals)
 from .metrics import ServeMetrics
 from .prefix_cache import PrefixCache
 from .scheduler import Scheduler
 
-__all__ = ["FINISH_REASONS", "GenerationRequest", "GenerationResult",
-           "PrefixCache", "QueueFullError", "Request", "SamplingParams",
-           "Scheduler", "ServeMetrics", "ServingEngine", "SlotKVCache",
-           "TokenStream"]
+__all__ = ["Arrival", "Clock", "FINISH_REASONS", "GenerationRequest",
+           "GenerationResult", "LoadResult", "PrefixCache", "QueueFullError",
+           "Request", "SLO", "SYSTEM_CLOCK", "SamplingParams", "Scheduler",
+           "ServeMetrics", "ServingEngine", "SlotKVCache", "TokenStream",
+           "VirtualClock", "VirtualCost", "Workload", "bootstrap_summary",
+           "make_arrivals", "run_load", "run_trials", "trace_arrivals"]

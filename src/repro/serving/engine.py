@@ -40,7 +40,6 @@ silently clamping KV writes past max_len).
 """
 from __future__ import annotations
 
-import time
 from typing import Callable, Optional
 
 import jax
@@ -52,6 +51,7 @@ from ..kernels.kv_pack import kv_buffer_keys
 from ..models import api as model_api
 from .api import (GenerationRequest, SamplingParams, TokenStream,
                   sample_batch, sample_token)
+from .clock import SYSTEM_CLOCK, Clock
 from .kv_cache import SlotKVCache
 from .metrics import ServeMetrics
 from .prefix_cache import PrefixCache
@@ -80,7 +80,8 @@ class ServingEngine:
     def __init__(self, model, plan: Optional[ExecutionPlan] = None, *,
                  slots: int = 8, max_len: int = 512,
                  max_queue: Optional[int] = None,
-                 metrics: Optional[ServeMetrics] = None):
+                 metrics: Optional[ServeMetrics] = None,
+                 clock: Clock = SYSTEM_CLOCK):
         if isinstance(model, DeployedModel):
             if plan is not None and plan != model.plan:
                 raise ValueError(
@@ -105,8 +106,13 @@ class ServingEngine:
         self.default_sampling = (plan.default_sampling
                                  if plan.default_sampling is not None
                                  else SamplingParams())
-        self.scheduler = Scheduler(slots, max_queue=max_queue)
-        self.metrics = metrics if metrics is not None else ServeMetrics()
+        # ONE clock for the whole serving stack (DESIGN.md §12): deadline
+        # shedding, TTFT/queue-wait stamps, and step timings all read it, so
+        # injecting a VirtualClock makes every timing path deterministic.
+        self.clock = clock
+        self.scheduler = Scheduler(slots, max_queue=max_queue, clock=clock)
+        self.metrics = (metrics if metrics is not None
+                        else ServeMetrics(clock=clock))
         self.generated: list[list[int]] = [[] for _ in range(slots)]
         self._streams: dict[int, TokenStream] = {}
         self._events: list[tuple[int, int]] = []
@@ -264,7 +270,7 @@ class ServingEngine:
 
     def _emit(self, req: GenerationRequest, token: int) -> None:
         if req.first_token_t is None:
-            req.first_token_t = time.monotonic()
+            req.first_token_t = self.clock()
             if req.ttft_s is not None:
                 self.metrics.record_wait("ttft", req.ttft_s)
         stream = self._streams.get(req.rid)
@@ -400,7 +406,7 @@ class ServingEngine:
         toks = np.zeros((n, bucket), np.int32)
         for i, (s, req) in enumerate(group):
             toks[i, :len(req.prompt)] = req.prompt
-        t0 = time.perf_counter()
+        t0 = self.clock()
         logits, pstate = self._prefill_fn(bucket, n)(self.params,
                                                      jnp.asarray(toks))
         firsts = []
@@ -411,7 +417,7 @@ class ServingEngine:
             firsts.append(self._sample_first(logits[i, plen - 1], s))
             self.kv.reset_slot(s)
             self.kv.insert_prefill(s, pstate, plen, bucket, row=i)
-        self.metrics.record("prefill", time.perf_counter() - t0, total)
+        self.metrics.record("prefill", self.clock() - t0, total)
         self._emit_first_tokens(group, firsts)
 
     def _prefill_group_blocks(self, bucket: int, m: int, keys, group) -> None:
@@ -421,7 +427,7 @@ class ServingEngine:
         forward so hit and cold runs attend bit-identical rows."""
         B = self.prefix_cache.block
         n = _pow2_ceil(len(group))
-        t0 = time.perf_counter()
+        t0 = self.clock()
         # scratch capacity on the BLOCK grid: a bucket capped at a
         # non-multiple-of-B max_len would make the last chunk's write run
         # past the buffer, where dynamic_update_slice clamps the start and
@@ -461,7 +467,7 @@ class ServingEngine:
             self.kv.reset_slot(s)
             self.kv.insert_rows(s, state, plen, copy, row=i)
             self._publish_prefix(req, m, state, i)
-        self.metrics.record("prefill", time.perf_counter() - t0, total)
+        self.metrics.record("prefill", self.clock() - t0, total)
         self._emit_first_tokens(group, firsts)
 
     def _publish_prefix(self, req: GenerationRequest, m: int, state,
@@ -500,13 +506,13 @@ class ServingEngine:
         toks = np.zeros((self.slots, 1), np.int32)
         for s in active:
             toks[s, 0] = self.generated[s][-1]
-        t0 = time.perf_counter()
+        t0 = self.clock()
         next_tok, self.kv.state = self._step(
             self.params, self.kv.state, jnp.asarray(toks),
             self._seed, self._gen_steps(), self._temp, self._topk,
             self._topp)
         next_tok = np.asarray(next_tok)
-        self.metrics.record("decode", time.perf_counter() - t0, len(active))
+        self.metrics.record("decode", self.clock() - t0, len(active))
         for s in active:
             req = self.scheduler.active[s]
             if req is None:    # freed mid-step by an on_token cancel()
@@ -559,7 +565,7 @@ class ServingEngine:
                 toks[s, 0] = req.prompt[self.pos[s]]
             else:                                  # submit() bans empty
                 toks[s, 0] = self.generated[s][-1]  # prompts: always filled
-        t0 = time.perf_counter()
+        t0 = self.clock()
         next_tok, self.state = self._step(
             self.params, self.state, jnp.asarray(toks),
             self._seed, self._gen_steps(), self._temp, self._topk,
@@ -571,7 +577,7 @@ class ServingEngine:
         n_decoding = sum(
             self.pos[s] >= len(self.scheduler.active[s].prompt) - 1
             for s in active)
-        self.metrics.record("decode", time.perf_counter() - t0, n_decoding)
+        self.metrics.record("decode", self.clock() - t0, n_decoding)
         for s in active:
             req = self.scheduler.active[s]
             if req is None:    # freed mid-step by an on_token cancel()

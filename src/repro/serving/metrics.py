@@ -28,6 +28,8 @@ from typing import Optional
 
 import numpy as np
 
+from .clock import Clock
+
 #: per-request wait kinds recorded via ``record_wait``
 WAIT_KINDS = ("ttft", "queue_wait")
 
@@ -46,14 +48,19 @@ def _pcts(lat: np.ndarray) -> tuple[float, float]:
 
 
 class ServeMetrics:
-    def __init__(self, window: Optional[int] = DEFAULT_WINDOW):
+    def __init__(self, window: Optional[int] = DEFAULT_WINDOW,
+                 clock: Clock = time.perf_counter):
+        # ``clock`` stamps the wall_s window (DESIGN.md §12): the engine
+        # injects its own clock so a VirtualClock run reports virtual wall
+        # time; the standalone default stays perf_counter, unchanged.
         self.window = window
+        self._clock = clock
         self._reset()
 
     def _reset(self) -> None:
         self._events: deque = deque(maxlen=self.window)
         self._waits: deque = deque(maxlen=self.window)
-        self._t0 = time.perf_counter()
+        self._t0 = self._clock()
         self._prefix_lookups = 0
         self._prefix_hits = 0
         self._prefix_reused = 0
@@ -82,7 +89,7 @@ class ServeMetrics:
         return lat, toks
 
     def summary(self) -> dict:
-        out: dict = {"wall_s": time.perf_counter() - self._t0}
+        out: dict = {"wall_s": self._clock() - self._t0}
         total_tokens = 0
         for kind in ("prefill", "decode"):
             lat, toks = self._kind(kind)

@@ -1,0 +1,151 @@
+"""Fuzz tests for PrefixCache accounting (DESIGN.md §11/§12).
+
+Random match/gather/release/insert sequences over a family of overlapping
+prompts, with the byte budget small enough that eviction is constantly
+active. After EVERY operation:
+
+* **byte accounting** — ``cache.bytes`` equals the recomputed sum of every
+  resident entry's ``nbytes`` (the budget/eviction arithmetic never drifts).
+* **refcounts** — every entry's ``refs`` equals the model's count of
+  outstanding pins for that key, and refcounts return to exactly zero once
+  every match is released.
+* **pin safety** — a pinned block is NEVER evicted, no matter how far
+  inserts push the cache over budget; once nothing is pinned, the cache is
+  back under budget (overshoot is transient by construction).
+
+Driven by a seeded numpy RNG (always runs) and by hypothesis (skips cleanly
+without it, runs in CI).
+"""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.serving.prefix_cache import PrefixCache
+
+BLOCK = 4
+#: bytes of one cached block with the _rows_fn layout below: a (2, B, 3)
+#: int32 rows array plus the B int32 defense-in-depth tokens
+BLOCK_BYTES = 2 * BLOCK * 3 * 4 + BLOCK * 4
+
+
+def _rows_fn(prompt):
+    """Deterministic fake KV rows: a pure function of the tokens, so any
+    re-insert of the same block is byte-identical."""
+    def rows_for_block(lo, hi):
+        blk = np.asarray(prompt[lo:hi], np.int32)
+        return {"kv": np.tile(blk.reshape(1, -1, 1), (2, 1, 3))}
+    return rows_for_block
+
+
+def _prompt(families, fam, length):
+    """A prompt sharing its leading tokens with family ``fam`` — overlap is
+    what makes chained block keys collide/extend across operations."""
+    base = families[fam % len(families)]
+    length = 2 + length % (len(base) - 1)
+    return base[:length]
+
+
+def _check(cache, pins):
+    recomputed = sum(e.nbytes for e in cache._entries.values())
+    assert cache.bytes == recomputed, (
+        f"tracked {cache.bytes} != recomputed {recomputed}")
+    for k, n in pins.items():
+        if n > 0:
+            assert k in cache._entries, "pinned block was evicted"
+    for k, e in cache._entries.items():
+        assert e.refs == pins.get(k, 0), (
+            f"refcount drift: entry {e.refs}, model {pins.get(k, 0)}")
+        assert e.refs >= 0
+    if not any(n > 0 for n in pins.values()):
+        assert cache.bytes <= cache.budget, (
+            "over budget with nothing pinned")
+
+
+def _run_ops(ops, budget_blocks=5):
+    rng_fam = np.random.default_rng(0)
+    families = [rng_fam.integers(1, 50, 24).astype(np.int32)
+                for _ in range(3)]
+    cache = PrefixCache(budget_bytes=budget_blocks * BLOCK_BYTES, block=BLOCK)
+    pins = {}                       # key -> outstanding pin count (model)
+    outstanding = []                # (keys, prompt, m) awaiting release
+    for code, fam, length in ops:
+        code = code % 4
+        prompt = _prompt(families, fam, length)
+        if code == 0:                                       # match (pins)
+            m, keys = cache.match(prompt)
+            assert m % BLOCK == 0 and m <= len(prompt) - 1
+            assert m == BLOCK * len(keys)
+            for k in keys:
+                pins[k] = pins.get(k, 0) + 1
+            if keys:
+                outstanding.append((keys, prompt, m))
+        elif code == 1 and outstanding:                     # gather + check
+            keys, p, m = outstanding[length % len(outstanding)]
+            g = cache.gather(keys)
+            assert g["kv"].shape[1] == m
+            assert np.array_equal(g["kv"][0, :, 0], p[:m])
+        elif code == 2 and outstanding:                     # release
+            keys, _, _ = outstanding.pop(length % len(outstanding))
+            cache.release(keys)
+            for k in keys:
+                pins[k] -= 1
+        elif code == 3:                                     # insert
+            upto = (length % (len(prompt) // BLOCK + 1)) * BLOCK
+            cache.insert(prompt, upto, _rows_fn(prompt))
+        _check(cache, pins)
+    # drain: release everything still pinned
+    for keys, _, _ in outstanding:
+        cache.release(keys)
+        for k in keys:
+            pins[k] -= 1
+    _check(cache, pins)
+    assert all(n == 0 for n in pins.values())
+    assert all(e.refs == 0 for e in cache._entries.values())
+    assert cache.bytes <= cache.budget
+
+
+# ------------------------------------------------------- randomized driver
+@pytest.mark.parametrize("seed", range(10))
+def test_random_cache_ops_preserve_accounting(seed):
+    rng = np.random.default_rng(seed)
+    ops = list(zip(rng.integers(0, 4, 250).tolist(),
+                   rng.integers(0, 3, 250).tolist(),
+                   rng.integers(0, 64, 250).tolist()))
+    _run_ops(ops, budget_blocks=3 + seed % 4)
+
+
+@given(ops=st.lists(st.tuples(st.integers(0, 3), st.integers(0, 2),
+                              st.integers(0, 63)), max_size=120))
+@settings(max_examples=60, deadline=None)
+def test_hypothesis_cache_ops_preserve_accounting(ops):
+    _run_ops(ops)
+
+
+# ----------------------------------------------------------- directed cases
+def test_pinned_block_survives_budget_pressure():
+    families = [np.arange(1, 25, dtype=np.int32) + 100 * i for i in range(4)]
+    cache = PrefixCache(budget_bytes=BLOCK_BYTES, block=BLOCK)
+    p0 = families[0]
+    cache.insert(p0, BLOCK, _rows_fn(p0))
+    m, keys = cache.match(p0)
+    assert m == BLOCK and len(keys) == 1
+    # shrink the budget under the pinned entry: it alone overshoots now, and
+    # every unpinned insert is evicted the moment it lands
+    cache.budget = BLOCK_BYTES - 1
+    for p in families[1:]:
+        cache.insert(p, 2 * BLOCK, _rows_fn(p))
+        assert keys[0] in cache._entries       # pinned entry must stay
+    assert cache.bytes > cache.budget          # transient overshoot, pinned
+    cache.release(keys)
+    assert cache.bytes <= cache.budget         # eviction caught up
+    assert all(e.refs == 0 for e in cache._entries.values())
+
+
+def test_match_never_covers_last_prompt_token():
+    p = np.arange(1, 2 * BLOCK + 1, dtype=np.int32)   # exactly 2 blocks
+    cache = PrefixCache(budget_bytes=10 * BLOCK_BYTES, block=BLOCK)
+    cache.insert(p, 2 * BLOCK, _rows_fn(p))
+    m, keys = cache.match(p)
+    # the last token must be computed for first-step logits: only block 0
+    assert m == BLOCK and len(keys) == 1
+    cache.release(keys)

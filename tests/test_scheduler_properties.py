@@ -1,0 +1,194 @@
+"""Property tests for the Scheduler (DESIGN.md §7/§10/§12).
+
+Model-based: a driver replays an arbitrary interleaving of
+submit/advance/admit/complete/cancel/pop_done/pop_shed against a Scheduler
+on a VirtualClock, re-checking the lifecycle invariants after every step:
+
+* **conservation** — every accepted request is in exactly ONE place at any
+  time (queued, active, done-pending, shed-pending, drained-done,
+  drained-shed, or cancelled); nothing is ever lost or double-delivered.
+* **admission order** — each admit() round places requests in priority
+  order, and within a priority level admission follows submit order (FIFO);
+  if free slots remain after admit(), the queue must be empty.
+* **query consistency** — ``has_work``/``queue_depth``/``num_active`` agree
+  with the actual queue/slot/shed contents.
+
+The same driver runs under two generators: a seeded numpy RNG (always runs,
+keeps local coverage) and hypothesis ``@given`` (richer shrinking search in
+CI; skips cleanly when hypothesis is absent via the compat shim).
+"""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.serving import (GenerationRequest, QueueFullError, Scheduler,
+                           VirtualClock)
+
+#: (code, a, b) operation vocabulary shared by both generators
+N_OPCODES = 7
+DEADLINES = (None, 0.05, 10.0)   # none / sheds under advance / never sheds
+
+
+def _req(priority, deadline):
+    return GenerationRequest(prompt=np.array([1, 2], dtype=np.int32),
+                             max_new_tokens=1, priority=priority,
+                             deadline_s=deadline)
+
+
+class _Model:
+    """External bookkeeping: where the driver believes every request is."""
+
+    def __init__(self):
+        self.accepted = set()
+        self.rejected = set()
+        self.drained_done = set()
+        self.drained_shed = set()
+        self.cancelled = set()
+        self.submit_order = {}           # rid -> global submit counter
+        self.last_admitted = {}          # priority -> last admitted counter
+        self._n = 0
+
+    def on_accept(self, req):
+        self.accepted.add(req.rid)
+        self.submit_order[req.rid] = self._n
+        self._n += 1
+
+    def check(self, sched):
+        queued = {r.rid for r in sched.queue}
+        active = {r.rid for r in sched.active if r is not None}
+        done = {r.rid for r in sched.done}
+        shed = {r.rid for r in sched._shed}
+        buckets = [queued, active, done, shed, self.drained_done,
+                   self.drained_shed, self.cancelled]
+        union = set().union(*buckets)
+        assert union == self.accepted, (
+            f"lost: {self.accepted - union}, phantom: {union - self.accepted}")
+        assert sum(len(b) for b in buckets) == len(union), (
+            "a request is in two lifecycle buckets at once")
+        assert not (self.accepted & self.rejected)
+        assert sched.queue_depth == len(queued)
+        assert sched.num_active == len(active)
+        assert sched.has_work == bool(queued or shed or active)
+
+
+def _apply(sched, clk, model, code, a, b):
+    if code == 0:                                          # submit
+        req = _req(a % 4, DEADLINES[b % len(DEADLINES)])
+        try:
+            sched.submit(req)
+            model.on_accept(req)
+        except QueueFullError:
+            model.rejected.add(req.rid)
+    elif code == 1:                                        # admit
+        placed = sched.admit()
+        prios = [r.priority for _, r in placed]
+        assert prios == sorted(prios, reverse=True), (
+            f"admit round out of priority order: {prios}")
+        for _, r in placed:
+            last = model.last_admitted.get(r.priority)
+            cur = model.submit_order[r.rid]
+            assert last is None or cur > last, (
+                f"FIFO violated within priority {r.priority}")
+            model.last_admitted[r.priority] = cur
+        if sched.num_active < sched.slots:
+            assert sched.queue_depth == 0, (
+                "admit left work queued despite free slots")
+    elif code == 2:                                        # complete a slot
+        occupied = sched.active_slots()
+        if occupied:
+            sched.complete(occupied[a % len(occupied)])
+    elif code == 3:                                        # cancel queued
+        q = sched.queue
+        if q:
+            r = sched.cancel(q[a % len(q)].rid)
+            assert r is not None
+            model.cancelled.add(r.rid)
+        else:
+            assert sched.cancel(10 ** 9) is None
+    elif code == 4:                                        # pop_done
+        for r in sched.pop_done():
+            assert r.rid not in model.drained_done, "done delivered twice"
+            model.drained_done.add(r.rid)
+    elif code == 5:                                        # pop_shed
+        for r in sched.pop_shed():
+            assert r.rid not in model.drained_shed, "shed delivered twice"
+            model.drained_shed.add(r.rid)
+    elif code == 6:                                        # advance time
+        clk.advance((a % 11) * 0.02)
+
+
+def _run_ops(ops, slots=2, max_queue=4):
+    clk = VirtualClock()
+    sched = Scheduler(slots, max_queue=max_queue, clock=clk)
+    model = _Model()
+    for code, a, b in ops:
+        _apply(sched, clk, model, code % N_OPCODES, a, b)
+        model.check(sched)
+    # settle: pump until empty — every accepted request must terminate in
+    # exactly one of done/shed/cancelled
+    for _ in range(10 * (len(ops) + 1)):
+        if not sched.has_work:
+            break
+        sched.admit()
+        for s in sched.active_slots():
+            sched.complete(s)
+        _apply(sched, clk, model, 4, 0, 0)
+        _apply(sched, clk, model, 5, 0, 0)
+        model.check(sched)
+    assert not sched.has_work, "scheduler failed to drain"
+    # pending done/shed lists deliberately don't count as has_work — one
+    # final drain collects anything completed before the settle loop began
+    _apply(sched, clk, model, 4, 0, 0)
+    _apply(sched, clk, model, 5, 0, 0)
+    model.check(sched)
+    assert (model.drained_done | model.drained_shed
+            | model.cancelled) == model.accepted
+
+
+# ------------------------------------------------------- randomized driver
+@pytest.mark.parametrize("seed", range(12))
+def test_random_interleavings_preserve_lifecycle(seed):
+    rng = np.random.default_rng(seed)
+    ops = [(int(c), int(a), int(b))
+           for c, a, b in zip(rng.integers(0, N_OPCODES, 150),
+                              rng.integers(0, 11, 150),
+                              rng.integers(0, 3, 150))]
+    _run_ops(ops, slots=1 + seed % 3, max_queue=(None, 1, 4)[seed % 3])
+
+
+@given(ops=st.lists(st.tuples(st.integers(0, N_OPCODES - 1),
+                              st.integers(0, 10), st.integers(0, 2)),
+                    max_size=80))
+@settings(max_examples=60, deadline=None)
+def test_hypothesis_interleavings_preserve_lifecycle(ops):
+    _run_ops(ops)
+
+
+# ----------------------------------------------------------- directed cases
+def test_priority_then_fifo_admission_order():
+    sched = Scheduler(4, clock=VirtualClock())
+    rids = [sched.submit(_req(p, None)).rid for p in (0, 2, 1, 2, 0)]
+    placed = [r.rid for _, r in sched.admit()]
+    # priority 2 first (in submit order), then 1, then 0 (in submit order)
+    assert placed[:4] == [rids[1], rids[3], rids[2], rids[0]]
+
+
+def test_has_work_true_with_only_shed_pending():
+    clk = VirtualClock()
+    sched = Scheduler(1, clock=clk)
+    sched.submit(_req(0, 0.01))
+    clk.advance(1.0)
+    assert sched.admit() == []              # expired: shed, not placed
+    assert sched.queue_depth == 0 and sched.num_active == 0
+    assert sched.has_work                   # pop_shed() still owed
+    assert len(sched.pop_shed()) == 1
+    assert not sched.has_work
+
+
+def test_cancel_missing_rid_is_none_and_harmless():
+    sched = Scheduler(1, clock=VirtualClock())
+    r = sched.submit(_req(0, None))
+    assert sched.cancel(r.rid + 1000) is None
+    assert sched.queue_depth == 1
+    assert sched.cancel(r.rid) is r
+    assert sched.queue_depth == 0 and not sched.has_work
