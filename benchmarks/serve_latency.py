@@ -44,13 +44,15 @@ from repro.models import api
 from repro.serving import GenerationRequest, ServingEngine
 
 
-def _build(cfg, policy, backend, fuse):
-    """Deployed params for (policy, backend, fuse).
+def _build(cfg, policy, backend, fuse, act_bits=None):
+    """Deployed params for (policy, backend, fuse, act_bits).
 
     The packed weights are independent of kv_bits, so callers cache these
-    across the kv sweep and only the (cheap) per-variant plan is rebuilt."""
+    across the kv sweep and only the (cheap) per-variant plan is rebuilt.
+    ``act_bits`` changes the stored activation-scale grid (DESIGN.md §13),
+    so it is part of the cache key."""
     plan = ExecutionPlan.build(cfg, policy, backend=backend,
-                               fuse_epilogue=fuse)
+                               fuse_epilogue=fuse, act_bits=act_bits)
     params = api.init_model(cfg, jax.random.PRNGKey(0))
     if policy is not None:
         params = deploy(params, plan).params
@@ -93,23 +95,30 @@ def run_variants(quick: bool = False) -> dict:
 
     int8_pol = QuantPolicy(num_layers=n, mode="int", last_k_int4=0)
     int4_pol = QuantPolicy(num_layers=n, mode="int", last_k_int4=n)
-    # (name, policy, backend, fuse_epilogue, kv_bits)
+    # (name, policy, backend, fuse_epilogue, kv_bits, act_bits) — act_bits
+    # (DESIGN.md §13): None follows the policy (W4A4 on int4 layers), 8
+    # retargets activations to the int8 grid, 0 is the fp-activation
+    # weight-only parity path (reference backend). The a8/afp rows chart
+    # the W4A4 speedup trajectory; informational, never gated.
     variants = [
-        ("fp32_kv16", None, "reference", False, 16),
-        ("int8_kv16", int8_pol, "pallas", False, 16),
-        ("int4_kv16", int4_pol, "pallas", True, 16),
-        ("int4_kv8", int4_pol, "pallas", True, 8),
-        ("int4_kv4", int4_pol, "pallas", True, 4),
+        ("fp32_kv16", None, "reference", False, 16, None),
+        ("int8_kv16", int8_pol, "pallas", False, 16, None),
+        ("int4_kv16", int4_pol, "pallas", True, 16, None),
+        ("int4_kv8", int4_pol, "pallas", True, 8, None),
+        ("int4_kv4", int4_pol, "pallas", True, 4, None),
+        ("int4_kv4_a8", int4_pol, "pallas", True, 4, 8),
+        ("int4_kv16_afp", int4_pol, "reference", False, 16, 0),
     ]
     results = {}
     built = {}   # identical deployed params reused across kv_bits variants
-    for name, policy, backend, fuse, kv_bits in variants:
-        key = (id(policy), backend, fuse)
+    for name, policy, backend, fuse, kv_bits, act_bits in variants:
+        key = (id(policy), backend, fuse, act_bits)
         if key not in built:
-            built[key] = _build(cfg, policy, backend, fuse)
+            built[key] = _build(cfg, policy, backend, fuse, act_bits)
         params = built[key]
         plan = ExecutionPlan.build(cfg, policy, backend=backend,
-                                   kv_bits=kv_bits, fuse_epilogue=fuse)
+                                   kv_bits=kv_bits, fuse_epilogue=fuse,
+                                   act_bits=act_bits)
         eng = ServingEngine(params, plan, slots=slots, max_len=64)
         _warmup(eng, cfg)
         # best-of-3 bursts: host-scheduler noise on shared runners is

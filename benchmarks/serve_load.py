@@ -174,14 +174,33 @@ def _virtual_scenarios(quick: bool, vocab: int) -> list[tuple]:
 
 
 def run_virtual(quick: bool) -> dict:
-    """Virtual-clock section: deterministic goodput/shed/reject numbers."""
+    """Virtual-clock section: deterministic goodput/shed/reject numbers.
+
+    Besides the fp reference plan, the steady scenario is repeated on a
+    deployed W4A4 engine (int4 weights, act_bits=4 — DESIGN.md §13): the
+    virtual cost model keeps the timing identical by construction, so the
+    row verifies the int4×int4 serving loop schedules and completes exactly
+    like fp — and its determinism rides the same back-to-back byte-equality
+    CI check. Informational, never gated."""
     cfg = reduced(get_config("stablelm-3b")).replace(act="gelu")
     plan = ExecutionPlan.build(cfg, None, backend="reference")
     params = api.init_model(cfg, jax.random.PRNGKey(0))
+    w4_pol = QuantPolicy(num_layers=cfg.num_layers, mode="int",
+                         last_k_int4=cfg.num_layers)
+    w4_plan = ExecutionPlan.build(cfg, w4_pol, backend="reference",
+                                  act_bits=4)
+    w4_params = deploy(api.init_model(cfg, jax.random.PRNGKey(0)),
+                       w4_plan).params
+    scenarios = _virtual_scenarios(quick, cfg.vocab_size)
+    steady_w, steady_slo, steady_q = next(
+        (w, slo, q) for n, w, slo, q in scenarios if n == "steady")
+    runs = ([(n, plan, params, w, slo, q) for n, w, slo, q in scenarios]
+            + [("steady_w4a4", w4_plan, w4_params, steady_w, steady_slo,
+                steady_q)])
     out = {}
-    for name, w, slo, max_queue in _virtual_scenarios(quick, cfg.vocab_size):
+    for name, sc_plan, sc_params, w, slo, max_queue in runs:
         def make_engine():
-            return ServingEngine(params, plan, slots=2, max_len=64,
+            return ServingEngine(sc_params, sc_plan, slots=2, max_len=64,
                                  max_queue=max_queue, clock=VirtualClock())
         results = run_trials(make_engine, w, n_trials=2, cost=VCOST)
         s = bootstrap_summary(results, slo)

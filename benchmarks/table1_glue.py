@@ -8,16 +8,29 @@ and (b) the KDLSQ baseline (STE scale grads, int8 acts, output-KD only).
 
 Paper claim being validated: MKQ >= KDLSQ at every compression level, with
 the gap widening as more layers go to 4 bits (Table 1's 2-3-4 rows).
+
+``--artifact DIR`` runs the DEPLOYED quality bench instead (DESIGN.md §13):
+train an fp student, calibrate, deploy a W4A4 artifact through the real
+export → save → load path, and score the cold artifact against the fp
+reference on the same task — the paper's "no accuracy loss at W4A4" claim
+measured on what serving actually runs, not on fake-quant training graphs.
+Emits ``BENCH_quality.json`` (gated in CI by tools/check_quality.py) and
+runs the sensitivity-ranked mixed-precision auto-search
+(repro.core.autosearch) for the cheapest per-layer bit assignment meeting
+an accuracy floor.
 """
 from __future__ import annotations
 
+import json
 import time
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.core.policy import QuantPolicy
 from repro.models import api
-from repro.models.bert import init_bert_classifier
+from repro.models.bert import bert_classify_logits, init_bert_classifier
 
 from . import common
 
@@ -87,5 +100,140 @@ def main(quick=False):
     return results
 
 
+# ------------------------------------------------- deployed quality bench
+
+def _preds(params, cfg, segments, data, n_batches, offset=10_000):
+    out = []
+    for i in range(n_batches):
+        b = data.batch(offset + i)
+        logits, _ = bert_classify_logits(params, cfg, segments,
+                                         jnp.asarray(b["tokens"]))
+        out.append(np.asarray(jnp.argmax(logits, -1)))
+    return np.concatenate(out)
+
+
+def run_artifact(quick=False, artifact_dir=None, search=True, seed=0):
+    """Train fp student → calibrate → deploy W4A4 → save → load → score.
+
+    Returns the BENCH_quality.json payload (DESIGN.md §13). All randomness
+    is seeded, so two back-to-back runs on one host agree exactly — the CI
+    flap check relies on this; the committed baseline carries a tolerance
+    band for cross-host float drift instead.
+    """
+    import tempfile
+
+    from repro.core.autosearch import search_mixed_precision
+    from repro.data.synthetic import SyntheticClassification
+    from repro.deploy import (DeployedModel, ExecutionPlan, deploy,
+                              retarget_act_bits)
+
+    steps = 80 if quick else 200
+    n_eval = 8
+    cfg = common.student_config()
+    data = SyntheticClassification(cfg.vocab_size, 24, 64,
+                                   num_classes=common.NUM_CLASSES, seed=seed)
+    key = jax.random.PRNGKey(seed)
+
+    fsegs = api.segments_for(cfg, None)
+    fp_student = common.train_best(
+        lambda: init_bert_classifier(cfg, common.NUM_CLASSES, key),
+        cfg, fsegs, data, steps=steps,
+        lrs=(2e-3,) if quick else (2e-3, 1e-3))
+    fp_acc = common.evaluate(fp_student, cfg, fsegs, data,
+                             n_batches=n_eval)
+    fp_pred = _preds(fp_student, cfg, fsegs, data, n_eval)
+
+    calib = [data.batch(5000 + i) for i in range(2 if quick else 4)]
+
+    def deploy_policy(policy, act_bits=None, save_dir=None):
+        plan = ExecutionPlan.build(cfg, policy, backend="reference",
+                                   act_bits=act_bits)
+        model = deploy(fp_student, plan, calib)
+        if save_dir:   # the real serving path: cold artifact from disk
+            model.save(save_dir)
+            model = DeployedModel.load(save_dir)
+        return model
+
+    def score_model(model):
+        return common.evaluate(model.params, cfg, model.plan.segments,
+                               data, n_batches=n_eval)
+
+    # --- the headline row: every layer W4A4, scored from a cold artifact
+    w4_pol = QuantPolicy(num_layers=cfg.num_layers, mode="int",
+                         last_k_int4=cfg.num_layers)
+    if artifact_dir is None:
+        artifact_dir = tempfile.mkdtemp(prefix="mkq-quality-")
+    w4a4 = deploy_policy(w4_pol, act_bits=4, save_dir=artifact_dir)
+    w4a4_acc = score_model(w4a4)
+    w4a4_pred = _preds(w4a4.params, cfg, w4a4.plan.segments, data, n_eval)
+    agreement = float((w4a4_pred == fp_pred).mean())
+
+    # weight-only parity row: same codes, fp activations (the integer-accum
+    # path's reference — isolates activation-quant error from weight error)
+    wfp = retarget_act_bits(w4a4, 0)
+    wfp_acc = score_model(wfp)
+
+    payload = {"quality": {
+        "fp_acc": fp_acc, "w4a4_acc": w4a4_acc,
+        "weight_only_acc": wfp_acc, "delta": fp_acc - w4a4_acc,
+        "agreement": agreement, "act_bits": 4,
+        "n_eval": int(n_eval * 64), "artifact": artifact_dir}}
+
+    if search:
+        floor = fp_acc - 0.05
+        res = search_mixed_precision(
+            cfg.num_layers,
+            lambda pol: score_model(deploy_policy(pol)),
+            accuracy_floor=floor)
+        payload["search"] = {
+            "floor": floor,
+            "base_int8_acc": res.base_accuracy,
+            "chosen_int4_layers": sorted(res.policy.int4_layers or ()),
+            "accuracy": res.accuracy,
+            "sensitivity": [[l, d] for l, d in res.sensitivity],
+            "trajectory": [[list(ls), acc, ok]
+                           for ls, acc, ok in res.trajectory]}
+    return payload
+
+
+def main_artifact(quick=False, artifact_dir=None, out=None, search=True):
+    t0 = time.perf_counter()
+    payload = run_artifact(quick=quick, artifact_dir=artifact_dir,
+                           search=search)
+    q = payload["quality"]
+    print("quality,metric,value")
+    for k in ("fp_acc", "w4a4_acc", "weight_only_acc", "delta",
+              "agreement"):
+        print(f"quality,{k},{q[k]:.4f}")
+    if "search" in payload:
+        s = payload["search"]
+        print(f"quality,search_int4_layers,"
+              f"\"{s['chosen_int4_layers']}\"")
+        print(f"quality,search_acc,{s['accuracy']:.4f}")
+    print(f"quality,total_s,{time.perf_counter() - t0:.1f}")
+    if out:
+        with open(out, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"quality,json,{out}")
+    return payload
+
+
 if __name__ == "__main__":
-    main()
+    import argparse
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true")
+    p.add_argument("--artifact", default=None, metavar="DIR", nargs="?",
+                   const="", help="deployed-quality mode: export the W4A4 "
+                   "artifact to DIR (temp dir when omitted), score it cold "
+                   "against the fp reference, run the mixed-precision "
+                   "search, and emit --out JSON")
+    p.add_argument("--out", default=None, metavar="JSON",
+                   help="artifact mode: write BENCH_quality.json here")
+    p.add_argument("--no-search", action="store_true",
+                   help="artifact mode: skip the mixed-precision search")
+    a = p.parse_args()
+    if a.artifact is not None:
+        main_artifact(quick=a.quick, artifact_dir=a.artifact or None,
+                      out=a.out, search=not a.no_search)
+    else:
+        main(quick=a.quick)

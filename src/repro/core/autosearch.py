@@ -1,0 +1,94 @@
+"""Sensitivity-ranked per-layer mixed-precision search (DESIGN.md §13).
+
+"Automatic Mixed-Precision Quantization Search of BERT" (PAPERS.md) shows
+per-layer bit allocation recovers the last accuracy points low-bit BERT
+loses: layers differ widely in quantization sensitivity, so one global knob
+(all-int4 / all-int8) either overpays bits or overpays accuracy. This module
+finds the CHEAPEST per-layer assignment meeting an accuracy floor:
+
+1. probe each layer alone at int4 (rest int8) and rank layers by the
+   accuracy drop they cause — the sensitivity ranking;
+2. greedily move layers to int4 from least to most sensitive, keeping a
+   move only while the scored accuracy stays at or above the floor.
+
+The scorer is a callback (``score_fn(policy) -> accuracy``) so the search is
+decoupled from how candidates are evaluated — the quality bench deploys a
+real artifact per candidate (benchmarks/table1_glue.py --artifact), unit
+tests use synthetic scorers. Cost: ``num_layers + 1`` probe scores plus at
+most ``num_layers`` greedy scores.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+from .policy import QuantPolicy
+
+__all__ = ["SearchResult", "search_mixed_precision"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchResult:
+    """Outcome of one search run.
+
+    policy       the cheapest policy found that meets the floor
+    accuracy     its scored accuracy (the all-int8 base accuracy when no
+                 int4 move survived)
+    base_accuracy  the all-int8 starting accuracy
+    sensitivity  ((layer, accuracy_drop), ...) ranked least-sensitive first
+    trajectory   ((candidate_int4_layers, accuracy, accepted), ...) — every
+                 greedy step, for the bench report
+    """
+
+    policy: QuantPolicy
+    accuracy: float
+    base_accuracy: float
+    sensitivity: tuple
+    trajectory: tuple
+
+    def describe(self) -> str:
+        i4 = sorted(self.policy.int4_layers or ())
+        return (f"int4_layers={i4} acc={self.accuracy:.4f} "
+                f"(base int8 {self.base_accuracy:.4f}, "
+                f"{len(self.trajectory)} greedy steps)")
+
+
+def search_mixed_precision(num_layers: int,
+                           score_fn: Callable[[QuantPolicy], float], *,
+                           accuracy_floor: float,
+                           mode: str = "int",
+                           default_bits: int = 8,
+                           grad_mode: str = "mse",
+                           layers: Sequence[int] | None = None
+                           ) -> SearchResult:
+    """Greedy sensitivity-ordered descent from all-int8 toward all-int4.
+
+    ``layers`` restricts the candidate set (default: every layer). A layer
+    whose greedy move drops accuracy below ``accuracy_floor`` is skipped,
+    not terminal: a later (more sensitive alone, cheaper combined) layer may
+    still fit under the floor.
+    """
+    cand = list(range(num_layers)) if layers is None else list(layers)
+
+    def mk(int4: Sequence[int]) -> QuantPolicy:
+        return QuantPolicy(num_layers=num_layers, mode=mode,
+                           int4_layers=tuple(sorted(int4)),
+                           default_bits=default_bits, grad_mode=grad_mode)
+
+    base = float(score_fn(mk(())))
+    probes = [(l, base - float(score_fn(mk((l,))))) for l in cand]
+    ranking = tuple(sorted(probes, key=lambda t: (t[1], t[0])))
+
+    chosen: list[int] = []
+    best = base
+    trajectory = []
+    for l, _drop in ranking:
+        trial = chosen + [l]
+        acc = float(score_fn(mk(trial)))
+        ok = acc >= accuracy_floor
+        trajectory.append((tuple(sorted(trial)), acc, ok))
+        if ok:
+            chosen, best = trial, acc
+    return SearchResult(policy=mk(chosen), accuracy=best,
+                        base_accuracy=base, sensitivity=ranking,
+                        trajectory=tuple(trajectory))

@@ -7,7 +7,7 @@
   bound to their plan, with atomic ``save``/``load`` so serve runs never
   touch fp weights or recalibrate.
 """
-from .artifact import DeployedModel, deploy
+from .artifact import DeployedModel, deploy, retarget_act_bits
 from .plan import ExecutionPlan
 
-__all__ = ["DeployedModel", "ExecutionPlan", "deploy"]
+__all__ = ["DeployedModel", "ExecutionPlan", "deploy", "retarget_act_bits"]

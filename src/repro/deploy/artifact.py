@@ -22,9 +22,10 @@ from typing import Optional
 
 from ..checkpoint import manager as ckpt
 from ..core import qat
-from .plan import ExecutionPlan, plan_from_meta, plan_to_meta
+from .plan import ExecutionPlan, plan_from_meta, plan_to_meta, resolve_segments
 
-__all__ = ["DeployedModel", "deploy", "ARTIFACT_FORMAT", "ARTIFACT_VERSION"]
+__all__ = ["DeployedModel", "deploy", "retarget_act_bits",
+           "ARTIFACT_FORMAT", "ARTIFACT_VERSION"]
 
 ARTIFACT_FORMAT = "mkq-deployed-model"
 ARTIFACT_VERSION = 1
@@ -64,7 +65,115 @@ def deploy(params, plan: ExecutionPlan, calib_batches: Optional[list] = None,
         params = qat.calibrate_act_scales(params, cfg, plan.policy, fwd,
                                           calib_batches)
     params_int = qat.deploy_params(params, cfg, plan.segments)
+    if plan.act_bits is not None:
+        # calibration learned s_a on the POLICY grid; the plan override
+        # retargets the stored scales onto its grid (DESIGN.md §13)
+        params_int = _rescale_act_scales(
+            params_int, cfg, _act_scale_factors(plan, None, plan.act_bits))
     return DeployedModel(plan=plan, params=params_int)
+
+
+# ------------------------------------------------------ act-grid retargeting
+
+def _act_scale_factors(plan: ExecutionPlan, old_act_bits, new_act_bits
+                       ) -> list[float]:
+    """Per-segment multipliers moving stored ``s_a`` leaves between
+    activation grids (DESIGN.md §13).
+
+    The MKQ grid pins the real-valued clip point ``s * qmax(bits)``, so
+    retargeting bits is a pure rescale: ``s_new = s_old * qmax(old)/qmax(new)``
+    — no re-calibration. Scales of fp-activation segments (a_bits 0) stay on
+    the policy grid, which keeps retargeting composable in any order.
+    A plan-level override is applied per quantized layer, so it can never
+    move segment boundaries (asserted here, not regrouped).
+    """
+    from ..core.quantizer import qrange
+    cfg, policy = plan.cfg, plan.policy
+    segs = lambda ab: resolve_segments(cfg, policy, plan.use_pallas,
+                                       plan.fuse_epilogue, act_bits=ab)
+    old, new, pol = segs(old_act_bits), segs(new_act_bits), segs(None)
+    factors = []
+    for (so, eo, spo), (sn, en, spn), (_, _, spp) in zip(old, new, pol):
+        if (so, eo) != (sn, en):
+            raise AssertionError(
+                "act_bits override moved a segment boundary "
+                f"([{so}:{eo}) vs [{sn}:{en})) — a_bits must stay a pure "
+                "function of w_bits")
+        go = spo.a_bits or spp.a_bits   # grid the scales are stored on
+        gn = spn.a_bits or spp.a_bits   # grid they must land on
+        factors.append(1.0 if go == gn
+                       else float(qrange(go)[1]) / float(qrange(gn)[1]))
+    return factors
+
+
+def _rescale_act_scales(params_int, cfg, factors: list[float]):
+    """Multiply every linear's ``s_a`` by its segment's factor, mirroring
+    ``qat.deploy_params``'s per-family layout."""
+    import jax.numpy as jnp
+
+    def scale_tree(tree, f):
+        if f == 1.0:
+            return tree
+        def walk(node):
+            if isinstance(node, dict):
+                if "s_a" in node and ("wq" in node or "w" in node):
+                    new = dict(node)
+                    new["s_a"] = (jnp.asarray(node["s_a"], jnp.float32)
+                                  * f).astype(node["s_a"].dtype)
+                    return new
+                return {k: walk(v) for k, v in node.items()}
+            return node
+        return walk(tree)
+
+    out = dict(params_int)
+    if cfg.family in ("xlstm", "hybrid"):
+        key = "mlstm" if cfg.family == "xlstm" else "mamba"
+        out[key] = [scale_tree(t, f)
+                    for t, f in zip(params_int[key], factors)]
+        if cfg.family == "xlstm":
+            out["slstm"] = [scale_tree(t, f)
+                            for t, f in zip(params_int["slstm"], factors)]
+        else:
+            out["shared"] = scale_tree(params_int["shared"], factors[-1])
+        return out
+    if cfg.family == "encdec":
+        out["enc"] = scale_tree(params_int["enc"], factors[0])
+        out["dec"] = [scale_tree(t, f)
+                      for t, f in zip(params_int["dec"], factors)]
+        return out
+    out["layers"] = [scale_tree(t, f)
+                     for t, f in zip(params_int["layers"], factors)]
+    return out
+
+
+def retarget_act_bits(model: "DeployedModel", act_bits,
+                      *, backend: Optional[str] = None) -> "DeployedModel":
+    """A new DeployedModel serving the same packed weights at a different
+    activation precision (DESIGN.md §13).
+
+    ``act_bits`` as in :meth:`ExecutionPlan.build`: 4/8 pick that grid for
+    every quantized segment, 0 runs fp activations (reference backend — the
+    backend is switched automatically unless overridden), None returns to
+    the policy's per-layer assignment. Stored ``s_a`` scales are rescaled by
+    the qmax ratio; weights, codes and every other plan knob are untouched.
+    """
+    plan = model.plan
+    if not plan.deployed:
+        raise ValueError("retarget_act_bits needs a deployed (mode='int') "
+                         "artifact")
+    kw = plan.build_kwargs()
+    kw["act_bits"] = act_bits
+    if backend is not None:
+        kw["backend"] = backend
+    elif act_bits == 0 and kw["backend"] != "reference":
+        kw["backend"] = "reference"   # fp activations: parity path
+    if kw["backend"] == "reference":
+        kw["fuse_epilogue"] = False   # fusing is a pallas-only notion
+    new_plan = ExecutionPlan.build(plan.cfg, plan.policy, **kw)
+    params = _rescale_act_scales(
+        model.params, plan.cfg,
+        _act_scale_factors(plan, plan.act_bits, act_bits))
+    return DeployedModel(plan=new_plan, params=params)
 
 
 @dataclasses.dataclass

@@ -56,12 +56,17 @@ def validate_cache_layout(cfg: ModelConfig, *, per_slot_len: bool = False,
 
 
 def resolve_segments(cfg: ModelConfig, policy: Optional[QuantPolicy],
-                     use_pallas: bool = False, fuse_epilogue: bool = False
+                     use_pallas: bool = False, fuse_epilogue: bool = False,
+                     act_bits: Optional[int] = None
                      ) -> list[tuple[int, int, QuantSpec]]:
     """Policy → contiguous (start, end, QuantSpec) runs for ``cfg``'s family.
 
     The resolver behind :meth:`ExecutionPlan.build`; the legacy
-    ``api.segments_for`` shim also lands here.
+    ``api.segments_for`` shim also lands here. ``act_bits`` is the plan-level
+    activation-precision override (DESIGN.md §13): None keeps the policy's
+    per-layer assignment, 4/8 forces that grid on every quantized layer, 0
+    keeps activations in floating point (weight-only quantization — the
+    parity-testing fallback).
     """
     from ..models import hybrid, transformer
     if policy is None:
@@ -69,14 +74,15 @@ def resolve_segments(cfg: ModelConfig, policy: Optional[QuantPolicy],
     if cfg.family in ("xlstm", "hybrid"):
         per = cfg.slstm_every if cfg.family == "xlstm" else cfg.attn_every
         return hybrid.group_segments(policy, cfg.num_layers // per,
-                                     use_pallas)
+                                     use_pallas, act_bits=act_bits)
     if cfg.family == "encdec":
         # segments over decoder layers
         if policy.num_layers != cfg.dec_layers:
             raise ValueError(
                 f"encdec policy covers decoder layers ({cfg.dec_layers}), "
                 f"got num_layers={policy.num_layers}")
-    return transformer.segments_from_policy(policy, use_pallas, fuse_epilogue)
+    return transformer.segments_from_policy(policy, use_pallas, fuse_epilogue,
+                                            act_bits=act_bits)
 
 
 def _segment_units(cfg: ModelConfig) -> int:
@@ -114,6 +120,11 @@ class ExecutionPlan:
     #: max admissions grouped into ONE batch-N prefill forward (DESIGN.md
     #: §11); 1 keeps the serial batch-1 prefill schedule.
     prefill_batch: int = 1
+    #: plan-level activation precision override (DESIGN.md §13). None keeps
+    #: the policy's per-layer assignment (old artifacts load with this);
+    #: 4/8 force that activation grid on every quantized segment; 0 keeps
+    #: activations fp (weight-only — the parity-testing fallback).
+    act_bits: Optional[int] = None
 
     # ------------------------------------------------------------- build
     @classmethod
@@ -122,7 +133,8 @@ class ExecutionPlan:
               prefill_mode: str = "auto", decode_dtype: str = "float32",
               fuse_epilogue: Optional[bool] = None,
               sampling=None, prefix_cache: int = 0,
-              prefill_batch: int = 1) -> "ExecutionPlan":
+              prefill_batch: int = 1,
+              act_bits: Optional[int] = None) -> "ExecutionPlan":
         """Resolve + validate a plan.
 
         backend       'pallas' routes int matmuls (and quantized-KV decode
@@ -147,6 +159,12 @@ class ExecutionPlan:
         prefill_batch max same-bucket admissions grouped into one batch-N
                       prefill forward (compiled per (bucket, n) with n
                       padded to a power of two); 1 keeps serial prefills.
+        act_bits      activation precision override (DESIGN.md §13): None
+                      follows the policy per layer; 4/8 retarget every
+                      quantized segment onto that grid (the artifact's
+                      calibrated scales are rescaled by the qmax ratio);
+                      0 runs fp activations against dequantized weights —
+                      reference backend only, the parity baseline.
         """
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, "
@@ -188,6 +206,21 @@ class ExecutionPlan:
                 "the KV cursor (RoPE); learned-pos embeddings index from 0 "
                 "and would disagree between chunked and whole-prompt runs")
 
+        if act_bits is not None:
+            act_bits = int(act_bits)
+            if act_bits not in (0, 4, 8):
+                raise ValueError(f"act_bits must be None, 0, 4 or 8, "
+                                 f"got {act_bits}")
+            if policy is None:
+                raise ValueError(
+                    "act_bits: nothing to retarget without a policy "
+                    "(fp plans have no quantized segments)")
+            if act_bits == 0 and backend != "reference":
+                raise ValueError(
+                    "act_bits=0 (fp activations) is the reference-backend "
+                    "parity path; the pallas int kernels consume activation "
+                    "codes")
+
         use_pallas = backend == "pallas"
         if fuse_epilogue is None:
             fuse_epilogue = use_pallas
@@ -195,12 +228,13 @@ class ExecutionPlan:
         # the reverse edge must wait until build() runs (never at import)
         from ..serving.api import SamplingParams
         sampling = SamplingParams.resolve(sampling)
-        segments = resolve_segments(cfg, policy, use_pallas, fuse_epilogue)
+        segments = resolve_segments(cfg, policy, use_pallas, fuse_epilogue,
+                                    act_bits=act_bits)
         return cls(cfg=cfg, policy=policy, backend=backend, kv_bits=kv_bits,
                    prefill_mode=prefill_mode, decode_dtype=decode_dtype,
                    fuse_epilogue=fuse_epilogue, segments=tuple(segments),
                    default_sampling=sampling, prefix_cache=prefix_cache,
-                   prefill_batch=prefill_batch)
+                   prefill_batch=prefill_batch, act_bits=act_bits)
 
     # ------------------------------------------------------------ queries
     @property
@@ -241,7 +275,8 @@ class ExecutionPlan:
                 "sampling": (None if self.default_sampling is None
                              else dataclasses.asdict(self.default_sampling)),
                 "prefix_cache": self.prefix_cache,
-                "prefill_batch": self.prefill_batch}
+                "prefill_batch": self.prefill_batch,
+                "act_bits": self.act_bits}
 
     def describe(self) -> str:
         segs = ", ".join(f"[{s}:{e}) w{sp.w_bits or 'fp'}/a{sp.a_bits or 'fp'}"

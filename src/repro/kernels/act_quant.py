@@ -26,18 +26,26 @@ def _kernel(x_ref, s_ref, out_ref, *, qmin: int, qmax: int):
 @functools.partial(jax.jit, static_argnames=("bits", "bm", "interpret"))
 def act_quant_pallas(x: jax.Array, s: jax.Array, *, bits: int = 8,
                      bm: int = DEFAULT_BM, interpret: bool = False):
-    """x: (M, K) float -> (M, K) int8 codes on the paper's k-bit grid."""
+    """x: (M, K) float -> (M, K) int8 codes on the paper's k-bit grid.
+
+    M is arbitrary (serving batches batch x seq rows): ragged M is padded up
+    to a multiple of the row block and the pad rows sliced off the result —
+    quantization is elementwise per row, so pad rows never leak.
+    """
     M, K = x.shape
     from ..core.quantizer import qrange
     qmin, qmax = qrange(bits)
     bm = min(bm, M)
-    assert M % bm == 0
-    return pl.pallas_call(
+    Mp = M if M % bm == 0 else (M // bm + 1) * bm
+    if Mp != M:
+        x = jnp.pad(x, ((0, Mp - M), (0, 0)))
+    out = pl.pallas_call(
         functools.partial(_kernel, qmin=qmin, qmax=qmax),
-        grid=(M // bm,),
+        grid=(Mp // bm,),
         in_specs=[pl.BlockSpec((bm, K), lambda i: (i, 0)),
                   pl.BlockSpec((1, 1), lambda i: (0, 0))],
         out_specs=pl.BlockSpec((bm, K), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((M, K), jnp.int8),
+        out_shape=jax.ShapeDtypeStruct((Mp, K), jnp.int8),
         interpret=interpret,
     )(x, s.reshape(1, 1))
+    return out[:M] if Mp != M else out

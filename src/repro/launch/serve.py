@@ -51,7 +51,8 @@ def _build_model(args):
                                prefill_mode=args.prefill_mode,
                                prefix_cache=int(args.prefix_cache_mb
                                                 * (1 << 20)),
-                               prefill_batch=args.prefill_batch)
+                               prefill_batch=args.prefill_batch,
+                               act_bits=args.act_bits)
     params = api.init_model(cfg, jax.random.PRNGKey(0))
     return deploy(params, plan)
 
@@ -86,6 +87,15 @@ def main(argv=None):
                         "§11): cached quantized prefix rows scatter into "
                         "new slots and only the prompt suffix prefills; "
                         "0 disables")
+    p.add_argument("--act-bits", type=int, default=None,
+                   choices=[0, 4, 8],
+                   help="activation precision override (DESIGN.md §13): "
+                        "4/8 quantize every quantized segment's activations "
+                        "onto that grid (W4A4 serving; calibrated scales are "
+                        "retargeted by the qmax ratio), 0 keeps activations "
+                        "fp against dequantized weights (reference backend; "
+                        "the parity baseline); default follows the policy. "
+                        "With --artifact, retargets the loaded model")
     p.add_argument("--prefill-batch", type=int, default=1,
                    help="group up to N same-bucket admissions into one "
                         "batch-N prefill forward (compiled per (bucket, n), "
@@ -125,6 +135,12 @@ def main(argv=None):
 
     if args.artifact:
         model = DeployedModel.load(args.artifact)
+        if (args.act_bits is not None
+                and args.act_bits != model.plan.act_bits):
+            from ..deploy import retarget_act_bits
+            model = retarget_act_bits(model, args.act_bits)
+            print(f"[serve] retargeted activations to "
+                  f"{'fp' if args.act_bits == 0 else f'{args.act_bits}-bit'}")
         print(f"[serve] loaded artifact {args.artifact}: "
               f"{model.plan.describe()}")
     else:

@@ -31,14 +31,18 @@ def _groups(cfg: ModelConfig) -> tuple[int, int]:
     return cfg.num_layers // per, per
 
 
-def group_segments(policy: QuantPolicy, num_groups: int, use_pallas=False
+def group_segments(policy: QuantPolicy, num_groups: int, use_pallas=False,
+                   act_bits: int | None = None
                    ) -> list[tuple[int, int, QuantSpec]]:
-    """Policy at group granularity: group g gets the bits of its first layer."""
+    """Policy at group granularity: group g gets the bits of its first layer.
+    ``act_bits`` is the plan-level activation override (DESIGN.md §13)."""
     per = policy.num_layers // num_groups
     segs: list[tuple[int, int, QuantSpec]] = []
     for g in range(num_groups):
         wb = policy.weight_bits(g * per) or 0
         ab = policy.act_bits(g * per) or 0
+        if act_bits is not None and wb:
+            ab = act_bits
         spec = QuantSpec(mode=policy.mode, w_bits=wb, a_bits=ab,
                          grad_mode=policy.grad_mode, use_pallas=use_pallas)
         if segs and segs[-1][2] == spec:

@@ -87,10 +87,25 @@ def qlinear(x: jax.Array, p: dict, spec: QuantSpec,
 
 def _qlinear_int(x: jax.Array, p: dict, spec: QuantSpec,
                  act: Optional[str] = None) -> jax.Array:
-    """Deployed integer path. Activations quantized on the fly (per-tensor scale)."""
+    """Deployed integer path. Activations quantized on the fly (per-tensor
+    scale); ``a_bits == 0`` keeps them fp against dequantized weights — the
+    weight-only parity baseline for the integer-accumulation path
+    (DESIGN.md §13; reference backend only, plan-validated)."""
     s_a, s_w = p["s_a"], p["s_w"]
-    a_bits = spec.a_bits or 8
+    a_bits = spec.a_bits
     b = p.get("b")
+    if a_bits == 0:
+        assert not spec.use_pallas and act is None, \
+            "fp-activation fallback is reference-backend only"
+        w8 = unpack_int4(p["wq"], axis=-2) if spec.w_bits == 4 else p["wq"]
+        k = x.shape[-1]
+        if w8.shape[-2] != k:  # drop int4 pack padding row if any
+            w8 = jax.lax.slice_in_dim(w8, 0, k, axis=-2)
+        w = (w8.astype(jnp.float32) * s_w).astype(x.dtype)
+        out = x @ w
+        if b is not None:
+            out = out + b.astype(out.dtype)
+        return out
     if spec.use_pallas:
         from ..kernels import ops as kops  # lazy: keeps CPU-only paths pallas-free
         lead = x.shape[:-1]

@@ -27,16 +27,22 @@ from .layers import (QuantSpec, act_fn, init_linear, init_norm, layernorm,
 # ------------------------------------------------------------------ policy → segments
 
 def segments_from_policy(policy: QuantPolicy, use_pallas: bool = False,
-                         fuse_epilogue: bool = False
+                         fuse_epilogue: bool = False,
+                         act_bits: int | None = None
                          ) -> list[tuple[int, int, QuantSpec]]:
     """Contiguous (start, end, QuantSpec) runs of equal bit-width.
 
     Low-level resolver: callers should build a
     ``repro.deploy.ExecutionPlan`` (DESIGN.md §9), which lands here with the
-    kernel-selection flags resolved from its backend."""
+    kernel-selection flags resolved from its backend. ``act_bits`` is the
+    plan-level activation override (DESIGN.md §13): applied to every
+    quantized layer, so it can never merge or split the policy's segment
+    boundaries (a layer's a_bits stays a pure function of its w_bits)."""
     segs: list[tuple[int, int, QuantSpec]] = []
     for l in range(policy.num_layers):
         wb, ab = policy.weight_bits(l) or 0, policy.act_bits(l) or 0
+        if act_bits is not None and wb:
+            ab = act_bits
         spec = QuantSpec(mode=policy.mode, w_bits=wb, a_bits=ab,
                          grad_mode=policy.grad_mode, use_pallas=use_pallas,
                          fuse_epilogue=fuse_epilogue)
@@ -160,12 +166,14 @@ def _expert_matmul(x_ecd, p: dict, spec: QuantSpec):
     if calibration.active():
         calibration.record_input(x_ecd, per_axis0=True)
     if spec.mode == "int":
-        a_bits = spec.a_bits or 8
-        x8 = quantize_to_int(x_ecd, p["s_a"], a_bits)
         w8 = unpack_int4(p["wq"], axis=-2) if spec.w_bits == 4 else p["wq"]
         k = x_ecd.shape[-1]
         if w8.shape[-2] != k:
             w8 = jax.lax.slice_in_dim(w8, 0, k, axis=-2)
+        if spec.a_bits == 0:  # fp-activation fallback (DESIGN.md §13)
+            w = (w8.astype(jnp.float32) * p["s_w"]).astype(x_ecd.dtype)
+            return jnp.einsum("eck,ekn->ecn", x_ecd, w)
+        x8 = quantize_to_int(x_ecd, p["s_a"], spec.a_bits)
         acc = jnp.einsum("eck,ekn->ecn", x8, w8,
                          preferred_element_type=jnp.int32)
         return (acc.astype(jnp.float32) * (p["s_a"] * p["s_w"])).astype(x_ecd.dtype)

@@ -1,0 +1,285 @@
+"""W4A4 serving-loop tests (DESIGN.md §13).
+
+Invariants:
+* ``ops.act_quant`` equals the ``quantize_to_int`` reference for ANY row
+  count (regression: the Pallas kernel asserted ``M % 256 == 0`` and
+  crashed on ragged serving batches);
+* activation quantization stays on the k-bit grid, round-trips within
+  ``s/2`` in-range and clamps to the grid endpoints out-of-range
+  (property tests);
+* the Pallas int4 x int4 integer-accumulation path matches the reference
+  int path to float roundoff (identical codes, different accumulation);
+* ``act_bits`` is validated at plan build (bad value / no policy / fp
+  fallback off the reference backend), overrides ``a_bits`` without moving
+  segment boundaries, and survives plan-meta round trips — including metas
+  written before the field existed (old artifacts load unchanged);
+* deploy-with-override == retarget-after-deploy bit-for-bit, retargeting
+  is invertible (4 -> 8 -> 4 to float roundoff) and touches ONLY ``s_a``
+  leaves, each by exactly the qmax ratio;
+* the fp-activation fallback never reads ``s_a`` (poison isolation,
+  mirroring the KV-cache poison test in test_kv_quant.py);
+* a saved W4A4 artifact reloads with its ``act_bits`` and serves token
+  streams byte-identical to the in-memory model, deterministically across
+  fresh engines, and the serve CLI retarget path is deterministic per
+  (prompt, seed);
+* the mixed-precision search (core/autosearch.py) ranks by sensitivity and
+  respects the accuracy floor, with skipped layers non-terminal.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.configs import get_config, reduced
+from repro.core.autosearch import search_mixed_precision
+from repro.core.policy import QuantPolicy
+from repro.core.quantizer import qrange, quantize_to_int
+from repro.deploy import (DeployedModel, ExecutionPlan, deploy,
+                          retarget_act_bits)
+from repro.kernels import ops
+from repro.models import api
+from repro.serving import Request, ServingEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg():
+    return reduced(get_config("stablelm-3b")).replace(act="gelu")
+
+
+def _w4_model(act_bits=None, backend="reference"):
+    """All-int4 policy deployed from the SAME fp init + calibration batch,
+    so two calls differ only in the plan."""
+    cfg = _cfg()
+    pol = QuantPolicy(num_layers=cfg.num_layers, mode="int",
+                      last_k_int4=cfg.num_layers)
+    plan = ExecutionPlan.build(cfg, pol, backend=backend, act_bits=act_bits)
+    rng = np.random.default_rng(0)
+    calib = [{"tokens": rng.integers(1, cfg.vocab_size, (2, 16))}]
+    return deploy(api.init_model(cfg, KEY), plan, calib_batches=calib)
+
+
+def _tokens(cfg, seed=1):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(1, cfg.vocab_size, (2, 12)), jnp.int32)
+
+
+def _logits(model, tokens):
+    return np.asarray(api.forward(model.params, model.plan,
+                                  tokens=tokens)[0])
+
+
+def _is_sa(path):
+    last = path[-1]
+    return getattr(last, "key", getattr(last, "name", None)) == "s_a"
+
+
+# ------------------------------------------------------- activation quant
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("m", [1, 7, 255, 256, 257, 300, 513])
+def test_act_quant_any_row_count(m, bits):
+    """Regression: the kernel asserted M % block == 0, so any serving batch
+    whose row count wasn't a multiple of 256 crashed. Pad rows must not
+    leak: the result equals the per-element reference exactly."""
+    rng = np.random.default_rng(m)
+    x = jnp.asarray(rng.standard_normal((m, 16)), jnp.float32)
+    s = jnp.float32(0.07)
+    got = np.asarray(ops.act_quant(x, s, bits))
+    assert got.shape == (m, 16) and got.dtype == np.int8
+    np.testing.assert_array_equal(got, np.asarray(quantize_to_int(x, s,
+                                                                  bits)))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(-4, 4, allow_nan=False, width=32),
+                min_size=1, max_size=64),
+       st.floats(0.01, 1.0), st.sampled_from([4, 8]))
+def test_act_quant_round_trip_and_clip(xs, s, bits):
+    qmin, qmax = qrange(bits)
+    x = np.asarray(xs, np.float32).reshape(1, -1)
+    codes = np.asarray(quantize_to_int(jnp.asarray(x), jnp.float32(s),
+                                       bits))[0]
+    assert codes.min() >= qmin and codes.max() <= qmax
+    xf = x[0].astype(np.float64)
+    dq = codes.astype(np.float64) * s
+    in_range = (xf >= qmin * s) & (xf <= qmax * s)
+    assert np.all(np.abs(dq[in_range] - xf[in_range]) <= s / 2 + 1e-5)
+    assert np.all(codes[xf > qmax * s] == qmax)
+    assert np.all(codes[xf < qmin * s] == qmin)
+
+
+def test_pallas_w4a4_matches_reference_int_path():
+    """Both backends quantize activations to the SAME codes against the
+    same packed weights; only the accumulation differs (int32 in the Pallas
+    kernel, fp in the reference einsum) — logits must agree to roundoff."""
+    cfg = _cfg()
+    tokens = _tokens(cfg)
+    ref = _logits(_w4_model(act_bits=4, backend="reference"), tokens)
+    pal = _logits(_w4_model(act_bits=4, backend="pallas"), tokens)
+    np.testing.assert_allclose(pal, ref, rtol=0, atol=1e-4)
+
+
+# ----------------------------------------------------------- plan surface
+
+def test_plan_act_bits_validation():
+    cfg = _cfg()
+    pol = QuantPolicy(num_layers=cfg.num_layers, mode="int",
+                      last_k_int4=cfg.num_layers)
+    with pytest.raises(ValueError, match="act_bits"):
+        ExecutionPlan.build(cfg, pol, act_bits=3)
+    with pytest.raises(ValueError, match="policy"):
+        ExecutionPlan.build(cfg, None, act_bits=4)
+    with pytest.raises(ValueError, match="reference"):
+        ExecutionPlan.build(cfg, pol, backend="pallas", act_bits=0)
+
+
+def test_act_bits_override_preserves_boundaries_and_meta():
+    """a_bits is a pure function of w_bits under a policy, so a uniform
+    override can never merge or split segments; and the plan meta must
+    round-trip — including metas written BEFORE act_bits existed."""
+    from repro.deploy.plan import plan_from_meta, plan_to_meta
+    cfg = _cfg()
+    pol = QuantPolicy(num_layers=cfg.num_layers, mode="int",
+                      last_k_int4=cfg.num_layers // 2)
+    base = ExecutionPlan.build(cfg, pol, backend="pallas")
+    over = ExecutionPlan.build(cfg, pol, backend="pallas", act_bits=4)
+    assert ([(s, e) for s, e, _ in over.segments]
+            == [(s, e) for s, e, _ in base.segments])
+    for (_, _, sp0), (_, _, sp1) in zip(base.segments, over.segments):
+        assert sp1.w_bits == sp0.w_bits
+        assert sp1.a_bits == (4 if sp0.mode == "int" else sp0.a_bits)
+
+    assert plan_from_meta(plan_to_meta(over)) == over
+    old = plan_to_meta(base)
+    old["build"].pop("act_bits")              # a pre-§13 artifact's meta
+    assert plan_from_meta(old) == base
+
+
+# ------------------------------------------------------------- retargeting
+
+def test_retarget_equals_deploy_override():
+    """The stored-scale invariant makes retargeting exact: rescaling a
+    policy-grid deployment onto the int4 grid is bit-identical to deploying
+    with the override. 4 -> 8 -> 4 round-trips each scale through two f32
+    multiplies by reciprocal qmax ratios — equal to 1 ulp, not bit-equal."""
+    cfg = _cfg()
+    tokens = _tokens(cfg)
+    base = _w4_model(act_bits=None)
+    ret = retarget_act_bits(base, 4)
+    assert ret.plan.act_bits == 4
+    np.testing.assert_array_equal(_logits(ret, tokens),
+                                  _logits(_w4_model(act_bits=4), tokens))
+    back = retarget_act_bits(retarget_act_bits(ret, 8), 4)
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_allclose(a, b, rtol=1e-6),
+        ret.params, back.params)
+
+
+def test_retarget_touches_only_act_scales():
+    base = _w4_model(act_bits=None)
+    ret = retarget_act_bits(base, 8)
+    flat_a = jax.tree_util.tree_flatten_with_path(base.params)[0]
+    flat_b = jax.tree_util.tree_flatten_with_path(ret.params)[0]
+    changed = []
+    for (path, a), (path_b, b) in zip(flat_a, flat_b):
+        assert path == path_b
+        if not np.array_equal(np.asarray(a), np.asarray(b)):
+            changed.append(path)
+    assert changed, "retargeting 4 -> 8 must move the stored scales"
+    assert all(_is_sa(p) for p in changed), \
+        f"non-s_a leaves changed: {[p for p in changed if not _is_sa(p)]}"
+    # and by exactly the qmax ratio (the rescale law)
+    ratio = qrange(4)[1] / qrange(8)[1]
+    for (path, a), (_, b) in zip(flat_a, flat_b):
+        if _is_sa(path):
+            np.testing.assert_allclose(np.asarray(b),
+                                       np.asarray(a) * ratio, rtol=1e-6)
+
+
+def test_fp_fallback_ignores_poisoned_act_scales():
+    """act_bits=0 serves dequantized weights against fp activations — the
+    path must never read s_a. Poisoning every stored activation scale
+    cannot change a single output bit (mirrors the KV poison test)."""
+    cfg = _cfg()
+    tokens = _tokens(cfg)
+    fp = retarget_act_bits(_w4_model(act_bits=None), 0)
+    assert fp.plan.act_bits == 0 and fp.plan.backend == "reference"
+    ref = _logits(fp, tokens)
+    poisoned = jax.tree_util.tree_map_with_path(
+        lambda p, leaf: leaf * 1e4 if _is_sa(p) else leaf, fp.params)
+    out = np.asarray(api.forward(poisoned, fp.plan, tokens=tokens)[0])
+    np.testing.assert_array_equal(ref, out)
+
+
+# ------------------------------------------- artifact + serving round trip
+
+def _streams(model, prompts, max_new=4):
+    eng = ServingEngine(model, slots=2, max_len=64)
+    for p in prompts:
+        eng.submit(Request(prompt=p.copy(), max_new_tokens=max_new))
+    eng.run_until_drained()
+    return {r.rid: r.out.tolist() for r in eng.done}
+
+
+def test_w4a4_artifact_serve_round_trip(tmp_path):
+    """deploy(act_bits=4) -> save -> load -> serve: the plan (including
+    act_bits) survives, streams match the in-memory model byte-for-byte,
+    and a second fresh engine repeats them (determinism per prompt)."""
+    model = _w4_model(act_bits=4, backend="pallas")
+    prompts = [np.array([3, 1, 4, 1, 5], np.int32),
+               np.array([2, 7, 1, 8], np.int32)]
+    mem = _streams(model, prompts)
+    loaded = DeployedModel.load(model.save(str(tmp_path / "artifact")))
+    assert loaded.plan == model.plan and loaded.plan.act_bits == 4
+    assert _streams(loaded, prompts) == mem
+    assert _streams(loaded, prompts) == mem
+
+
+def test_serve_cli_act_bits_deterministic(tmp_path, capsys):
+    """Acceptance: ``serve --artifact DIR --act-bits 4`` retargets the
+    loaded model and emits deterministic streams per (prompt, seed)."""
+    from repro.launch import serve
+    art = str(tmp_path / "artifact")
+    serve.main(["--reduced", "--requests", "2", "--slots", "1",
+                "--max-len", "64", "--export", art])
+    capsys.readouterr()
+    args = ["--artifact", art, "--act-bits", "4", "--requests", "2",
+            "--slots", "1", "--max-len", "64", "--temperature", "0.8",
+            "--seed", "3", "--stream"]
+    serve.main(args)
+    out1 = capsys.readouterr().out
+    serve.main(args)
+    out2 = capsys.readouterr().out
+    assert "[serve] retargeted activations to 4-bit" in out1
+    stream1 = [ln for ln in out1.splitlines() if ln.startswith("[stream]")]
+    stream2 = [ln for ln in out2.splitlines() if ln.startswith("[stream]")]
+    assert stream1 and stream1 == stream2
+
+
+# -------------------------------------------------- mixed-precision search
+
+def test_search_ranks_by_sensitivity_and_respects_floor():
+    cost = {0: 0.0, 1: 0.01, 2: 0.2, 3: 0.0}
+
+    def score(pol):
+        return 0.9 - sum(cost[l] for l in (pol.int4_layers or ()))
+
+    res = search_mixed_precision(4, score, accuracy_floor=0.88)
+    assert sorted(res.policy.int4_layers) == [0, 1, 3]
+    assert res.base_accuracy == pytest.approx(0.9)
+    assert res.accuracy == pytest.approx(0.89)
+    # least-sensitive first, ties broken by layer index
+    assert [l for l, _ in res.sensitivity] == [0, 3, 1, 2]
+    # the too-sensitive layer was TRIED and refused, not silently dropped
+    assert any(not ok and 2 in cand for cand, _, ok in res.trajectory)
+
+
+def test_search_keeps_all_int8_when_nothing_fits():
+    def score(pol):
+        return 0.9 - 0.5 * len(pol.int4_layers or ())
+
+    res = search_mixed_precision(3, score, accuracy_floor=0.89)
+    assert tuple(res.policy.int4_layers or ()) == ()
+    assert res.accuracy == res.base_accuracy == pytest.approx(0.9)

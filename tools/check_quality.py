@@ -1,0 +1,121 @@
+#!/usr/bin/env python3
+"""Quality gate: fail CI when the deployed W4A4 artifact loses accuracy
+(DESIGN.md §13).
+
+Input: ``BENCH_quality.json`` from
+``python -m benchmarks.table1_glue --quick --artifact DIR --out ...`` —
+the fp student vs the cold W4A4 artifact (export → save → load → score) on
+the synthetic GLUE-style task. Two checks, both tolerance-banded:
+
+1. **The paper claim** — ``fp_acc - w4a4_acc <= --max-delta``: deployed
+   4-bit weights AND activations hold accuracy against the fp reference.
+   Gated against the current run's own fp baseline, so it is
+   host-normalized by construction (both numbers come from one host).
+2. **Regression vs the committed baseline** — ``w4a4_acc`` must not fall
+   more than ``--tolerance`` below ``benchmarks/BENCH_quality_baseline.json``.
+   The band absorbs cross-host float drift; on ONE host the bench is
+   seeded end-to-end, so CI runs it twice back-to-back and gates both runs
+   (the flap check, mirroring bench-smoke).
+
+Everything else (weight-only parity row, prediction agreement, the
+mixed-precision search result) is printed as INFO for the CI log.
+
+Usage:
+  python tools/check_quality.py [--current BENCH_quality.json]
+                                [--baseline benchmarks/BENCH_quality_baseline.json]
+                                [--tolerance 0.05] [--max-delta 0.05]
+                                [--update]   # rewrite the baseline from current
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DEFAULT_CURRENT = "BENCH_quality.json"
+DEFAULT_BASELINE = ROOT / "benchmarks" / "BENCH_quality_baseline.json"
+
+
+def load(path: pathlib.Path) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    if "quality" not in data:
+        raise SystemExit(f"FAIL: {path} has no 'quality' key")
+    return data
+
+
+def check(current: dict, baseline: dict, tolerance: float,
+          max_delta: float) -> list[str]:
+    failures = []
+    cur, base = current["quality"], baseline["quality"]
+
+    delta = cur["fp_acc"] - cur["w4a4_acc"]
+    bad = delta > max_delta
+    failures += ["delta"] if bad else []
+    print(f"{'FAIL' if bad else 'ok'}: W4A4 vs fp delta {delta:+.4f} "
+          f"(fp {cur['fp_acc']:.4f}, w4a4 {cur['w4a4_acc']:.4f}, "
+          f"max allowed {max_delta:+.4f})")
+
+    floor = base["w4a4_acc"] - tolerance
+    bad = cur["w4a4_acc"] < floor
+    failures += ["w4a4_acc"] if bad else []
+    print(f"{'FAIL' if bad else 'ok'}: w4a4_acc {cur['w4a4_acc']:.4f} vs "
+          f"baseline {base['w4a4_acc']:.4f} (floor {floor:.4f})")
+
+    print(f"INFO: weight-only (afp) acc {cur['weight_only_acc']:.4f}, "
+          f"prediction agreement {cur['agreement']:.4f} "
+          f"(baseline {base['agreement']:.4f}), "
+          f"n_eval {cur.get('n_eval', '?')}")
+    s = current.get("search")
+    if s:
+        print(f"INFO: mixed-precision search: int4_layers="
+              f"{s['chosen_int4_layers']} acc {s['accuracy']:.4f} "
+              f"(all-int8 base {s['base_int8_acc']:.4f}, "
+              f"floor {s['floor']:.4f})")
+    return failures
+
+
+def main() -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--current", default=DEFAULT_CURRENT)
+    p.add_argument("--baseline", default=str(DEFAULT_BASELINE))
+    p.add_argument("--tolerance", type=float, default=0.05,
+                   help="allowed w4a4_acc drop vs the committed baseline "
+                        "(absorbs cross-host float drift)")
+    p.add_argument("--max-delta", type=float, default=0.05,
+                   help="allowed fp-vs-W4A4 accuracy gap within the "
+                        "current run (the paper claim)")
+    p.add_argument("--update", action="store_true",
+                   help="overwrite the committed baseline with the current "
+                        "results")
+    args = p.parse_args()
+
+    cur_path = pathlib.Path(args.current)
+    if args.update:
+        data = load(cur_path)
+        data["quality"].pop("artifact", None)  # host-local temp path
+        with open(args.baseline, "w") as f:
+            json.dump(data, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"OK: baseline updated -> {args.baseline}")
+        return 0
+
+    base_path = pathlib.Path(args.baseline)
+    if not base_path.exists():
+        print(f"NOTE: no quality baseline at {base_path}; gate skipped "
+              "(run with --update to record one)")
+        return 0
+    failures = check(load(cur_path), load(base_path),
+                     args.tolerance, args.max_delta)
+    if failures:
+        print(f"FAIL: quality gate: {', '.join(failures)}")
+        return 1
+    print("OK: deployed W4A4 accuracy within tolerance of the fp reference "
+          "and the committed baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
