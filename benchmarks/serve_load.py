@@ -39,9 +39,11 @@ from repro.configs import get_config, reduced
 from repro.core.policy import QuantPolicy
 from repro.deploy import ExecutionPlan, deploy
 from repro.models import api
-from repro.serving import (SLO, GenerationRequest, ServingEngine,
-                           VirtualClock, VirtualCost, Workload,
-                           bootstrap_summary, run_trials)
+from repro.models.bert import init_bert_classifier, tinybert_config
+from repro.serving import (SLO, GenerationRequest, MultiTenantEngine,
+                           ServingEngine, VirtualClock, VirtualCost,
+                           Workload, bootstrap_summary, make_arrivals,
+                           run_load, run_trials)
 from repro.serving.loadgen import load_trace
 
 #: SLO / load calibration multipliers over the measured warmup step cost.
@@ -173,6 +175,86 @@ def _virtual_scenarios(quick: bool, vocab: int) -> list[tuple]:
     ]
 
 
+def _bert_encoder_model():
+    """Small int4 W4A4 BERT classifier deployed under a mode='encoder' plan
+    — the DESIGN.md §14 serving artifact, sized for CPU-virtual runs."""
+    bcfg = tinybert_config(num_classes=2, layers=2, d=64, heads=4, d_ff=128,
+                           vocab=256, name="tinybert-bench")
+    bpol = QuantPolicy(num_layers=bcfg.num_layers, mode="int",
+                       last_k_int4=bcfg.num_layers)
+    bplan = ExecutionPlan.build(bcfg, bpol, backend="reference", act_bits=4,
+                                mode="encoder", prefill_batch=4)
+    bparams = init_bert_classifier(bcfg, 2, jax.random.PRNGKey(7))
+    return deploy(bparams, bplan)
+
+
+def run_virtual_encoder(quick: bool) -> dict:
+    """Virtual-clock encoder + multi-tenant scenarios (DESIGN.md §14).
+
+    * ``encoder_steady`` — a pure EncodeRequest stream (classify) against a
+      mode='encoder' int4 W4A4 engine: prefill-only goodput, deterministic.
+    * ``mixed_tenant`` — ONE MultiTenantEngine hosting the encoder artifact
+      ('cls', modest offered rate) next to an int4 decoder ('gen', flooded
+      past its bounded queue): deficit round-robin must keep the modest
+      tenant's SLO goodput high while the flood tenant absorbs its own
+      rejections — the fair-share / no-starvation evidence, byte-identical
+      across runs like the rest of the virtual section.
+    """
+    n = 12 if quick else 32
+    out = {}
+
+    bmodel = _bert_encoder_model()
+    w_enc = Workload(n_requests=n, rate_rps=40.0, vocab=256,
+                     prompt_len=(4, 12), encode_frac=1.0)
+    slo_enc = SLO(ttft_s=0.3, itl_s=0.1)
+
+    def make_enc():
+        return ServingEngine(bmodel, slots=2, max_len=64,
+                             clock=VirtualClock())
+
+    results = run_trials(make_enc, w_enc, n_trials=2, cost=VCOST)
+    s = bootstrap_summary(results, slo_enc)
+    out["encoder_steady"] = {"cost": VCOST.__dict__, "summary": s}
+    g = s.get("goodput", {"mean": 0.0})
+    print(f"[virtual] encoder_steady: goodput {g['mean']:.3f}, "
+          f"completed {s['n_completed']}/{s['n_counted']}")
+
+    # ---- mixed_tenant: flood vs modest through one DRR pump
+    cfg = reduced(get_config("stablelm-3b")).replace(act="gelu")
+    w4_pol = QuantPolicy(num_layers=cfg.num_layers, mode="int",
+                         last_k_int4=cfg.num_layers)
+    w4_plan = ExecutionPlan.build(cfg, w4_pol, backend="reference",
+                                  act_bits=4)
+    lmodel = deploy(api.init_model(cfg, jax.random.PRNGKey(0)), w4_plan)
+
+    w_cls = Workload(n_requests=n, rate_rps=20.0, vocab=256,
+                     prompt_len=(4, 12), encode_frac=1.0, tenant="cls")
+    w_gen = Workload(n_requests=2 * n, rate_rps=300.0, vocab=cfg.vocab_size,
+                     prompt_len=(4, 12), new_tokens=(2, 6), tenant="gen")
+    slo_mix = SLO(ttft_s=0.5, itl_s=0.1)
+
+    def make_mt():
+        mt = MultiTenantEngine(clock=VirtualClock(), quantum_tokens=32)
+        mt.add_tenant("cls", bmodel, slots=2, max_len=64)
+        mt.add_tenant("gen", lmodel, slots=2, max_len=64, max_queue=4)
+        return mt
+
+    results = []
+    for i in range(2):
+        arrivals = sorted(
+            make_arrivals(w_cls, seed=100 + i)
+            + make_arrivals(w_gen, seed=200 + i), key=lambda a: a.t)
+        results.append(run_load(make_mt(), arrivals, cost=VCOST))
+    s = bootstrap_summary(results, slo_mix)
+    out["mixed_tenant"] = {"cost": VCOST.__dict__, "summary": s}
+    bt = s.get("by_tenant", {})
+    for name, cell in bt.items():
+        print(f"[virtual] mixed_tenant/{name}: goodput "
+              f"{cell['goodput']:.3f} "
+              f"({cell['n_good']}/{cell['n_counted']})")
+    return out
+
+
 def run_virtual(quick: bool) -> dict:
     """Virtual-clock section: deterministic goodput/shed/reject numbers.
 
@@ -218,6 +300,7 @@ def main(quick: bool = False, trials: int | None = None,
     trace = load_trace(trace_path) if trace_path else None
     wall = run_wall(quick, trials, trace)
     virtual = run_virtual(quick)
+    virtual.update(run_virtual_encoder(quick))
     if out:
         payload = {
             "bench": "serve_load",

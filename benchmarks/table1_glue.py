@@ -102,11 +102,13 @@ def main(quick=False):
 
 # ------------------------------------------------- deployed quality bench
 
-def _preds(params, cfg, segments, data, n_batches, offset=10_000):
+def _preds(params, plan, data, n_batches, offset=10_000):
+    """Argmax predictions through an ExecutionPlan — the same plan-routed
+    forward the serving encoder path runs (DESIGN.md §14)."""
     out = []
     for i in range(n_batches):
         b = data.batch(offset + i)
-        logits, _ = bert_classify_logits(params, cfg, segments,
+        logits, _ = bert_classify_logits(params, plan,
                                          jnp.asarray(b["tokens"]))
         out.append(np.asarray(jnp.argmax(logits, -1)))
     return np.concatenate(out)
@@ -134,14 +136,15 @@ def run_artifact(quick=False, artifact_dir=None, search=True, seed=0):
                                    num_classes=common.NUM_CLASSES, seed=seed)
     key = jax.random.PRNGKey(seed)
 
-    fsegs = api.segments_for(cfg, None)
+    fp_plan = ExecutionPlan.build(cfg, None, backend="reference")
+    fsegs = fp_plan.segments
     fp_student = common.train_best(
         lambda: init_bert_classifier(cfg, common.NUM_CLASSES, key),
         cfg, fsegs, data, steps=steps,
         lrs=(2e-3,) if quick else (2e-3, 1e-3))
     fp_acc = common.evaluate(fp_student, cfg, fsegs, data,
                              n_batches=n_eval)
-    fp_pred = _preds(fp_student, cfg, fsegs, data, n_eval)
+    fp_pred = _preds(fp_student, fp_plan, data, n_eval)
 
     calib = [data.batch(5000 + i) for i in range(2 if quick else 4)]
 
@@ -165,7 +168,7 @@ def run_artifact(quick=False, artifact_dir=None, search=True, seed=0):
         artifact_dir = tempfile.mkdtemp(prefix="mkq-quality-")
     w4a4 = deploy_policy(w4_pol, act_bits=4, save_dir=artifact_dir)
     w4a4_acc = score_model(w4a4)
-    w4a4_pred = _preds(w4a4.params, cfg, w4a4.plan.segments, data, n_eval)
+    w4a4_pred = _preds(w4a4.params, w4a4.plan, data, n_eval)
     agreement = float((w4a4_pred == fp_pred).mean())
 
     # weight-only parity row: same codes, fp activations (the integer-accum
@@ -180,13 +183,13 @@ def run_artifact(quick=False, artifact_dir=None, search=True, seed=0):
         "n_eval": int(n_eval * 64), "artifact": artifact_dir}}
 
     if search:
-        floor = fp_acc - 0.05
+        # relative floor: "within 5 accuracy points of the fp student"
         res = search_mixed_precision(
             cfg.num_layers,
             lambda pol: score_model(deploy_policy(pol)),
-            accuracy_floor=floor)
+            floor_delta=0.05, fp_score=fp_acc)
         payload["search"] = {
-            "floor": floor,
+            "floor": res.floor,
             "base_int8_acc": res.base_accuracy,
             "chosen_int4_layers": sorted(res.policy.int4_layers or ()),
             "accuracy": res.accuracy,

@@ -45,17 +45,21 @@ class SearchResult:
     base_accuracy: float
     sensitivity: tuple
     trajectory: tuple
+    floor: float = float("-inf")     # the resolved accuracy floor used
 
     def describe(self) -> str:
         i4 = sorted(self.policy.int4_layers or ())
         return (f"int4_layers={i4} acc={self.accuracy:.4f} "
                 f"(base int8 {self.base_accuracy:.4f}, "
+                f"floor {self.floor:.4f}, "
                 f"{len(self.trajectory)} greedy steps)")
 
 
 def search_mixed_precision(num_layers: int,
                            score_fn: Callable[[QuantPolicy], float], *,
-                           accuracy_floor: float,
+                           accuracy_floor: float | None = None,
+                           floor_delta: float | None = None,
+                           fp_score: float | None = None,
                            mode: str = "int",
                            default_bits: int = 8,
                            grad_mode: str = "mse",
@@ -63,11 +67,22 @@ def search_mixed_precision(num_layers: int,
                            ) -> SearchResult:
     """Greedy sensitivity-ordered descent from all-int8 toward all-int4.
 
+    The floor is given EITHER absolutely (``accuracy_floor``) or relatively
+    (``floor_delta``: allowed drop below a reference score — ``fp_score``
+    when supplied, else the all-int8 base this search measures anyway).
+    Relative floors are how the quality bench states its gate ("within 5
+    points of fp32") without hard-coding a dataset-specific number; exactly
+    one of the two must be set.
+
     ``layers`` restricts the candidate set (default: every layer). A layer
-    whose greedy move drops accuracy below ``accuracy_floor`` is skipped,
-    not terminal: a later (more sensitive alone, cheaper combined) layer may
+    whose greedy move drops accuracy below the floor is skipped, not
+    terminal: a later (more sensitive alone, cheaper combined) layer may
     still fit under the floor.
     """
+    if (accuracy_floor is None) == (floor_delta is None):
+        raise ValueError("pass exactly one of accuracy_floor / floor_delta")
+    if accuracy_floor is not None and fp_score is not None:
+        raise ValueError("fp_score only applies to a floor_delta floor")
     cand = list(range(num_layers)) if layers is None else list(layers)
 
     def mk(int4: Sequence[int]) -> QuantPolicy:
@@ -76,6 +91,8 @@ def search_mixed_precision(num_layers: int,
                            default_bits=default_bits, grad_mode=grad_mode)
 
     base = float(score_fn(mk(())))
+    floor = (accuracy_floor if accuracy_floor is not None
+             else (fp_score if fp_score is not None else base) - floor_delta)
     probes = [(l, base - float(score_fn(mk((l,))))) for l in cand]
     ranking = tuple(sorted(probes, key=lambda t: (t[1], t[0])))
 
@@ -85,10 +102,10 @@ def search_mixed_precision(num_layers: int,
     for l, _drop in ranking:
         trial = chosen + [l]
         acc = float(score_fn(mk(trial)))
-        ok = acc >= accuracy_floor
+        ok = acc >= floor
         trajectory.append((tuple(sorted(trial)), acc, ok))
         if ok:
             chosen, best = trial, acc
     return SearchResult(policy=mk(chosen), accuracy=best,
                         base_accuracy=base, sensitivity=ranking,
-                        trajectory=tuple(trajectory))
+                        trajectory=tuple(trajectory), floor=floor)

@@ -8,6 +8,7 @@
   touch fp weights or recalibrate.
 """
 from .artifact import DeployedModel, deploy, retarget_act_bits
-from .plan import ExecutionPlan
+from .plan import MODES, ExecutionPlan
 
-__all__ = ["DeployedModel", "ExecutionPlan", "deploy", "retarget_act_bits"]
+__all__ = ["DeployedModel", "ExecutionPlan", "MODES", "deploy",
+           "retarget_act_bits"]

@@ -32,13 +32,18 @@ from ..core.policy import QuantPolicy
 from ..models.layers import QuantSpec
 
 __all__ = ["ExecutionPlan", "resolve_segments", "validate_cache_layout",
-           "TOKEN_ONLY_FAMILIES", "BACKENDS"]
+           "TOKEN_ONLY_FAMILIES", "BACKENDS", "MODES"]
 
 #: Families without a {'k','v','len'} decode cache: no chunked prefill, no
 #: slot table, no quantized KV — they keep the fp recurrent/decode state.
 TOKEN_ONLY_FAMILIES = ("xlstm", "hybrid", "encdec")
 
 BACKENDS = ("reference", "pallas")
+
+#: Execution modes (DESIGN.md §14): 'decode' is the autoregressive serving
+#: loop; 'encoder' is the prefill-only mode — one batched bidirectional
+#: forward per request (classify/embed/score), no KV retention.
+MODES = ("decode", "encoder")
 
 _DECODE_DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}
 
@@ -125,6 +130,11 @@ class ExecutionPlan:
     #: 4/8 force that activation grid on every quantized segment; 0 keeps
     #: activations fp (weight-only — the parity-testing fallback).
     act_bits: Optional[int] = None
+    #: execution mode (DESIGN.md §14): 'decode' (default; every artifact
+    #: written before this knob existed loads as it) or 'encoder' — the
+    #: prefill-only mode serving EncodeRequests (classify/embed/score)
+    #: through one batched bidirectional forward, no KV retention.
+    mode: str = "decode"
 
     # ------------------------------------------------------------- build
     @classmethod
@@ -134,7 +144,8 @@ class ExecutionPlan:
               fuse_epilogue: Optional[bool] = None,
               sampling=None, prefix_cache: int = 0,
               prefill_batch: int = 1,
-              act_bits: Optional[int] = None) -> "ExecutionPlan":
+              act_bits: Optional[int] = None,
+              mode: str = "decode") -> "ExecutionPlan":
         """Resolve + validate a plan.
 
         backend       'pallas' routes int matmuls (and quantized-KV decode
@@ -165,10 +176,18 @@ class ExecutionPlan:
                       calibrated scales are rescaled by the qmax ratio);
                       0 runs fp activations against dequantized weights —
                       reference backend only, the parity baseline.
+        mode          'decode' (default) or 'encoder' (DESIGN.md §14): the
+                      prefill-only execution mode — requests resolve to
+                      logits / pooled embeddings / scores from ONE batched
+                      forward, no KV retention, so kv_bits must stay 16 and
+                      the prefix cache must be off. Needs a family with a
+                      bidirectional encode path (bert).
         """
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, "
                              f"got {backend!r}")
+        if mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
         if decode_dtype not in _DECODE_DTYPES:
             raise ValueError(f"decode_dtype must be one of "
                              f"{sorted(_DECODE_DTYPES)}, got {decode_dtype!r}")
@@ -221,6 +240,28 @@ class ExecutionPlan:
                     "parity path; the pallas int kernels consume activation "
                     "codes")
 
+        if mode == "encoder":
+            # prefill-only: one bidirectional forward, results read straight
+            # from the logits/hidden states — nothing is ever cached, so a
+            # quantized (or any) KV layout and prefix reuse are meaningless
+            # rather than merely unused. Surface the contradiction at build.
+            if cfg.family != "bert":
+                raise ValueError(
+                    f"mode='encoder' needs a bidirectional encode path "
+                    f"(family 'bert'), got family {cfg.family!r}")
+            if kv_bits != 16:
+                raise ValueError(
+                    "mode='encoder' retains no KV cache; kv_bits must stay "
+                    f"16 (got {kv_bits})")
+            if prefix_cache:
+                raise ValueError(
+                    "mode='encoder' computes every request in one forward; "
+                    "prefix_cache has no KV rows to reuse")
+            if prefill_mode == "token":
+                raise ValueError(
+                    "mode='encoder' runs the batched bucketed forward; "
+                    "prefill_mode='token' (seed semantics) does not apply")
+
         use_pallas = backend == "pallas"
         if fuse_epilogue is None:
             fuse_epilogue = use_pallas
@@ -234,7 +275,7 @@ class ExecutionPlan:
                    prefill_mode=prefill_mode, decode_dtype=decode_dtype,
                    fuse_epilogue=fuse_epilogue, segments=tuple(segments),
                    default_sampling=sampling, prefix_cache=prefix_cache,
-                   prefill_batch=prefill_batch, act_bits=act_bits)
+                   prefill_batch=prefill_batch, act_bits=act_bits, mode=mode)
 
     # ------------------------------------------------------------ queries
     @property
@@ -276,12 +317,15 @@ class ExecutionPlan:
                              else dataclasses.asdict(self.default_sampling)),
                 "prefix_cache": self.prefix_cache,
                 "prefill_batch": self.prefill_batch,
-                "act_bits": self.act_bits}
+                "act_bits": self.act_bits,
+                "mode": self.mode}
 
     def describe(self) -> str:
         segs = ", ".join(f"[{s}:{e}) w{sp.w_bits or 'fp'}/a{sp.a_bits or 'fp'}"
                          for s, e, sp in self.segments)
-        return (f"ExecutionPlan({self.cfg.name}, backend={self.backend}, "
+        mode = "" if self.mode == "decode" else f"mode={self.mode}, "
+        return (f"ExecutionPlan({self.cfg.name}, {mode}"
+                f"backend={self.backend}, "
                 f"kv_bits={self.kv_bits}, prefill={self.prefill_mode}, "
                 f"dtype={self.decode_dtype}, segments=({segs}))")
 

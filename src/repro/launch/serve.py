@@ -1,7 +1,7 @@
 """Thin CLI shim over the serving subsystem (repro/serving — DESIGN.md
 §7/§9/§10).
 
-Three entry modes:
+Entry modes:
 
 * default            build an ExecutionPlan, deploy an int model in-process,
                      serve a synthetic burst (smoke/demo path);
@@ -9,7 +9,16 @@ Three entry modes:
 * ``--artifact DIR`` load a previously exported artifact and serve it —
                      no fp weights are initialized and nothing recalibrates;
                      token streams are byte-identical to the in-memory run
-                     that exported it.
+                     that exported it;
+* ``--mode encoder`` prefill-only serving (DESIGN.md §14): deploys an int4
+                     BERT classifier (or loads one with --artifact) and
+                     serves a burst of ``EncodeRequest``\\ s (``--task``
+                     classify/embed/score) — no decode loop, no KV;
+* ``--tenant NAME=DIR`` (repeatable) multi-tenant serving: each NAME loads
+                     the artifact at DIR into one ``MultiTenantEngine``
+                     (shared clock/metrics, deficit-round-robin fair share);
+                     the burst round-robins across tenants, encode traffic
+                     for encoder artifacts and generation otherwise.
 
 Generation flags map onto the §10 API: ``--temperature/--top-k/--top-p/
 --seed`` build the burst's ``SamplingParams`` (temperature 0 = greedy),
@@ -27,8 +36,36 @@ import time
 
 import numpy as np
 
-from ..serving import (GenerationRequest, QueueFullError,  # noqa: F401
+from ..serving import (EncodeRequest, GenerationRequest,  # noqa: F401
+                       MultiTenantEngine, QueueFullError,
                        Request, SamplingParams, ServingEngine)  # (compat)
+
+
+def _build_encoder_model(args):
+    """In-process int4 W4A4 BERT classifier artifact for --mode encoder:
+    the paper's deployment target, calibrated on a small synthetic batch."""
+    import jax
+
+    from ..core.policy import QuantPolicy
+    from ..deploy import ExecutionPlan, deploy
+    from ..models.bert import init_bert_classifier, tinybert_config
+
+    cfg = (tinybert_config(layers=4, d=96, heads=4, d_ff=192, vocab=512,
+                           name="tinybert4-reduced")
+           if args.reduced else tinybert_config())
+    n_units = cfg.num_layers
+    k4 = args.int4_last_k if args.int4_last_k >= 0 else n_units
+    policy = QuantPolicy(num_layers=n_units, mode="int", last_k_int4=k4)
+    plan = ExecutionPlan.build(cfg, policy, backend=args.backend,
+                               mode="encoder",
+                               prefill_batch=max(args.prefill_batch, 1),
+                               act_bits=args.act_bits)
+    params = init_bert_classifier(cfg, 2, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    calib = [{"tokens": rng.integers(1, cfg.vocab_size,
+                                     (4, 16)).astype(np.int32)}
+             for _ in range(4)]
+    return deploy(params, plan, calib)
 
 
 def _build_model(args):
@@ -63,6 +100,20 @@ def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--arch", default="stablelm-3b")
     p.add_argument("--reduced", action="store_true")
+    p.add_argument("--mode", default="decode",
+                   choices=["decode", "encoder"],
+                   help="'encoder' serves prefill-only EncodeRequests "
+                        "(DESIGN.md §14) over an int4 BERT classifier "
+                        "artifact — one batched bidirectional forward per "
+                        "request, no decode loop")
+    p.add_argument("--task", default="classify",
+                   choices=["classify", "embed", "score"],
+                   help="what the --mode encoder burst asks for per request")
+    p.add_argument("--tenant", action="append", default=None,
+                   metavar="NAME=DIR",
+                   help="repeatable: host the artifact at DIR as tenant "
+                        "NAME in one MultiTenantEngine (deficit-round-robin "
+                        "fair share; encoder and decoder artifacts mix)")
     p.add_argument("--requests", type=int, default=16)
     p.add_argument("--slots", type=int, default=4)
     p.add_argument("--max-len", type=int, default=128)
@@ -132,6 +183,11 @@ def main(argv=None):
     if args.artifact and args.export:
         p.error("--export builds a fresh model and cannot be combined with "
                 "--artifact (which serves an existing one)")
+    if args.tenant:
+        if args.artifact or args.export:
+            p.error("--tenant hosts saved artifacts; it cannot be combined "
+                    "with --artifact/--export")
+        return _main_tenants(args)
 
     if args.artifact:
         model = DeployedModel.load(args.artifact)
@@ -144,14 +200,21 @@ def main(argv=None):
         print(f"[serve] loaded artifact {args.artifact}: "
               f"{model.plan.describe()}")
     else:
-        model = _build_model(args)
+        model = (_build_encoder_model(args) if args.mode == "encoder"
+                 else _build_model(args))
         if args.export:
             path = model.save(args.export)
             print(f"[serve] exported artifact to {path}")
+    if args.mode == "encoder" and model.plan.mode != "encoder":
+        p.error(f"--mode encoder needs a mode='encoder' artifact; "
+                f"{args.artifact or 'the built model'} is "
+                f"mode={model.plan.mode!r}")
 
     cfg = model.plan.cfg
     eng = ServingEngine(model, slots=args.slots, max_len=args.max_len,
                         max_queue=args.max_queue)
+    if model.plan.mode == "encoder":
+        return _serve_encoder_burst(args, eng, cfg)
     sampling = SamplingParams(temperature=args.temperature,
                               top_k=args.top_k, top_p=args.top_p,
                               seed=args.seed)
@@ -188,6 +251,90 @@ def main(argv=None):
           f"({total_tokens / max(dt, 1e-9):.1f} tok/s, "
           f"{stopped} stop-token exits)")
     print(f"[serve] {eng.metrics.report()}")
+
+
+def _serve_encoder_burst(args, eng, cfg):
+    """Synthetic prefill-only burst (DESIGN.md §14): submit EncodeRequests,
+    drain, report — the encoder-mode analogue of the generation burst."""
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    steps = 0
+    handles = []
+    for _ in range(args.requests):
+        plen = int(rng.integers(4, 17))
+        toks = rng.integers(1, cfg.vocab_size, plen).astype(np.int32)
+        req = EncodeRequest(tokens=toks, task=args.task)
+        while True:
+            try:
+                handles.append(eng.submit_encode(req))
+                break
+            except QueueFullError:       # backpressure: drain a round, retry
+                eng.engine_step()
+                steps += 1
+    steps += eng.run_until_drained()
+    dt = time.time() - t0
+    finished = eng.pop_done()
+    done = sum(r.finish_reason == "done" for r in finished)
+    total = sum(len(r.tokens) for r in finished)
+    print(f"[serve] encoder burst: {len(finished)} requests ({done} done), "
+          f"{total} input tokens, {steps} engine steps, {dt:.2f}s "
+          f"({total / max(dt, 1e-9):.1f} tok/s, task={args.task})")
+    print(f"[serve] {eng.metrics.report()}")
+
+
+def _main_tenants(args):
+    """--tenant NAME=DIR...: host every artifact in one MultiTenantEngine
+    and round-robin a synthetic burst across tenants (encode traffic for
+    encoder artifacts, generation otherwise)."""
+    from ..deploy import DeployedModel
+
+    pairs = []
+    for spec in args.tenant:
+        name, sep, path = spec.partition("=")
+        if not sep or not name or not path:
+            raise SystemExit(f"--tenant expects NAME=DIR, got {spec!r}")
+        pairs.append((name, path))
+
+    mt = MultiTenantEngine()
+    for name, path in pairs:
+        model = DeployedModel.load(path)
+        mt.add_tenant(name, model, slots=args.slots, max_len=args.max_len,
+                      max_queue=args.max_queue)
+        print(f"[serve] tenant {name!r}: {model.plan.describe()}")
+
+    sampling = SamplingParams(temperature=args.temperature,
+                              top_k=args.top_k, top_p=args.top_p,
+                              seed=args.seed)
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    steps = 0
+    for i in range(args.requests):
+        name = pairs[i % len(pairs)][0]
+        t = mt.tenants[name]
+        vocab = t.engine.cfg.vocab_size
+        plen = int(rng.integers(4, 12))
+        toks = rng.integers(1, vocab, plen).astype(np.int32)
+        while True:
+            try:
+                if t.engine.mode == "encoder":
+                    mt.submit_encode(EncodeRequest(tokens=toks,
+                                                   task=args.task),
+                                     tenant=name)
+                else:
+                    mt.submit(GenerationRequest(prompt=toks,
+                                                max_new_tokens=8,
+                                                sampling=sampling),
+                              tenant=name)
+                break
+            except QueueFullError:       # backpressure: drain a round, retry
+                mt.engine_step()
+                steps += 1
+    steps += mt.run_until_drained()
+    dt = time.time() - t0
+    finished = mt.pop_done()
+    print(f"[serve] multi-tenant burst: {len(finished)} requests over "
+          f"{len(pairs)} tenants, {steps} engine steps, {dt:.2f}s")
+    print(f"[serve] {mt.metrics.report()}")
 
 
 if __name__ == "__main__":

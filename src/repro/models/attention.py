@@ -169,11 +169,16 @@ def attention_block(x: jax.Array, p: dict, *, n_heads: int, n_kv: int, hd: int,
                     kv_input: Optional[jax.Array] = None,
                     chunk: int = 0,
                     seq_shard_axes=None,
+                    kv_len: Optional[jax.Array] = None,
                     want_taps: bool = False):
     """One attention sublayer (pre-norm residual handled by caller).
 
     cache: {'k': (B, S_max, n_kv, hd), 'v': ..., 'len': ()} -> decode mode.
     kv_input: cross-attention source (enc-dec); keys/values from this tensor.
+    kv_len: (B,) per-row valid lengths for the cacheless path — keys at or
+        past a row's length are masked before the softmax. This is what makes
+        bucket-padded BIDIRECTIONAL (encoder) batches exact: causal models
+        never see the zero tail, but a bidirectional row would attend it.
     Returns (out, new_cache, taps).
     """
     B, Sq, _ = x.shape
@@ -250,11 +255,14 @@ def attention_block(x: jax.Array, p: dict, *, n_heads: int, n_kv: int, hd: int,
         new_cache = (k, v)
     else:
         kk, vv = _repeat_kv(k, groups), _repeat_kv(v, groups)
-        if chunk and Sq > chunk and Sq % chunk == 0 and kv_input is None:
+        if (chunk and Sq > chunk and Sq % chunk == 0 and kv_input is None
+                and kv_len is None):
             out = chunked_attention(q, kk, vv, causal=causal, chunk=chunk,
                                     seq_shard_axes=seq_shard_axes)
         else:
-            out = full_attention(q, kk, vv, causal=causal and kv_input is None)
+            out = full_attention(q, kk, vv, causal=causal and kv_input is None,
+                                 kv_len=(None if kv_len is None else
+                                         jnp.reshape(kv_len, (-1, 1, 1, 1))))
     out = out.reshape(B, Sq, n_heads * hd)
     return qlinear(out, p["wo"], spec), new_cache, taps
 

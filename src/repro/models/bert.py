@@ -4,6 +4,14 @@ TinyBERT4 (Jiao et al. 2019): L=4, d_h=312, d_i=1200, 12 heads — the student
 quantized in Table 1. BERT-base is available as a (deeper) teacher. Built on
 the shared transformer stack with post-LN, learned positions, GELU FFN,
 bidirectional attention.
+
+``bert_encode`` / ``bert_classify_logits`` route through an
+``ExecutionPlan`` (DESIGN.md §9/§14) like every other family — the legacy
+``(params, cfg, segments, tokens)`` positional form is kept as a deprecation
+shim, mirroring ``models.api.forward``. Both accept per-row ``lengths``:
+padded key positions are masked out of the bidirectional attention, so a
+bucket-padded batch row is bit-identical to the unpadded forward — the
+property the prefill-only serving path (serving/encoder.py) is built on.
 """
 from __future__ import annotations
 
@@ -34,11 +42,36 @@ def init_bert_classifier(cfg: ModelConfig, num_classes: int, key) -> dict:
     return params
 
 
-def bert_encode(params, cfg: ModelConfig, segments, tokens,
-                want_taps: bool = False):
-    """Final hidden states (B, S, d) + taps, via the shared stack."""
+def _unpack(plan, segments, tokens):
+    """(plan, tokens) or legacy (cfg, segments, tokens) → (cfg, segs, toks).
+
+    New form: ``bert_encode(params, plan, tokens)`` — the third positional
+    slot carries the tokens. Legacy form: ``bert_encode(params, cfg,
+    segments, tokens)`` (deprecation shim, same pattern as api.forward)."""
+    if isinstance(plan, ModelConfig):
+        if tokens is None:
+            raise TypeError(
+                "bert forward with a raw ModelConfig needs (cfg, segments, "
+                "tokens); build an ExecutionPlan instead "
+                "(repro.deploy.ExecutionPlan.build)")
+        return plan, segments, tokens
+    return plan.cfg, plan.segments, (segments if tokens is None else tokens)
+
+
+def bert_encode(params, plan, segments=None, tokens=None,
+                want_taps: bool = False, *, lengths=None):
+    """Final hidden states (B, S, d) + taps, via the shared stack.
+
+    ``lengths`` (B,) masks key positions ``>= lengths[b]`` out of every
+    attention layer — rows padded to a common bucket stay bit-identical to
+    their unpadded forward (bidirectional attention would otherwise attend
+    the zero tail). Padded QUERY positions still produce (garbage) outputs;
+    callers read real positions only (the CLS pool reads position 0).
+    """
     from .transformer import _embed, _norm, _slice_stack, block_apply
 
+    cfg, segments, tokens = _unpack(plan, segments, tokens)
+    kv_len = None if lengths is None else jnp.asarray(lengths, jnp.int32)
     x = _embed(params, cfg, tokens)
     layers = params["layers"]
     presliced = isinstance(layers, (list, tuple))
@@ -50,23 +83,30 @@ def bert_encode(params, cfg: ModelConfig, segments, tokens,
         seg = _slice_stack(seg_full, 0, n_scan)
 
         def body(carry, lp):
-            h, _, _, _ = block_apply(carry, lp, cfg, spec)
+            h, _, _, _ = block_apply(carry, lp, cfg, spec, kv_len=kv_len)
             return h, None
 
         if n_scan > 0:
             x, _ = scan_layers(body, x, seg)
         if want_taps and is_last:
             lp = jax.tree.map(lambda a: a[-1], seg_full)
-            x, _, taps, _ = block_apply(x, lp, cfg, spec, want_taps=True)
+            x, _, taps, _ = block_apply(x, lp, cfg, spec, want_taps=True,
+                                        kv_len=kv_len)
     x = _norm(x, params["final_norm"], cfg.norm)
     return x, taps
 
 
-def bert_classify_logits(params, cfg: ModelConfig, segments, tokens,
-                         want_taps: bool = False):
-    h, taps = bert_encode(params, cfg, segments, tokens, want_taps)
-    pooled = jnp.tanh(h[:, 0].astype(jnp.float32) @ params["pooler"]["w"]
-                      + params["pooler"]["b"])
+def bert_pool(params, h):
+    """CLS pooling: tanh projection of position 0 → (B, d) embedding."""
+    return jnp.tanh(h[:, 0].astype(jnp.float32) @ params["pooler"]["w"]
+                    + params["pooler"]["b"])
+
+
+def bert_classify_logits(params, plan, segments=None, tokens=None,
+                         want_taps: bool = False, *, lengths=None):
+    h, taps = bert_encode(params, plan, segments, tokens, want_taps,
+                          lengths=lengths)
+    pooled = bert_pool(params, h)
     logits = pooled @ params["classifier"]["w"] + params["classifier"]["b"]
     return logits, taps
 

@@ -316,7 +316,7 @@ def init_block(key, cfg: ModelConfig, stacked: int | None) -> dict:
 
 def block_apply(x, p, cfg: ModelConfig, spec: QuantSpec, *,
                 cache: Optional[dict] = None, want_taps: bool = False,
-                positions=None):
+                positions=None, kv_len=None):
     pre = cfg.norm == "rms" or not cfg.learned_pos  # BERT uses post-LN
     chunk = cfg.attn_chunk if x.shape[1] > cfg.attn_chunk_threshold else 0
     aux = jnp.zeros((), jnp.float32)
@@ -328,7 +328,7 @@ def block_apply(x, p, cfg: ModelConfig, spec: QuantSpec, *,
             h, p["attn"], n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads, hd=cfg.hd,
             spec=spec, causal=cfg.causal, rope=cfg.rope, rope_theta=cfg.rope_theta,
             positions=positions, cache=cache, chunk=chunk,
-            seq_shard_axes=ssa, want_taps=want_taps)
+            seq_shard_axes=ssa, kv_len=kv_len, want_taps=want_taps)
 
     if pre:
         a, new_cache, taps = attn_fn(_norm(x, p["ln1"], cfg.norm))

@@ -16,6 +16,13 @@ The deployment side of the paper, grown into a real package:
 * ``engine``     — prefill/decode-separated step loop over the deployed
   model (batched bucketed prefill, prefix reuse); ``engine_step()`` is the
   public pump, ``cancel(rid)`` frees a slot and its KV state mid-flight
+* ``encoder``    — prefill-only request surface (DESIGN.md §14):
+  ``EncodeRequest`` (classify / embed / score) resolves in the step that
+  admits it — one batched bucketed forward, no KV retention — through the
+  same scheduler/deadline/cancel machinery as generation traffic
+* ``tenants``    — ``MultiTenantEngine``: several deployed artifacts in one
+  process behind one pump, per-tenant bounded queues + token-budget quotas
+  (``QuotaExceededError``) and deficit-round-robin fair-share admission
 * ``metrics``    — latency/throughput recorder (tokens/sec, p50/p99 steps,
   TTFT and queue-wait percentiles, prefix hit rate; bounded windows +
   ``pop_summary()`` drain)
@@ -38,6 +45,8 @@ shim over ``GenerationRequest``.
 from .api import (FINISH_REASONS, GenerationRequest, GenerationResult,
                   QueueFullError, Request, SamplingParams, TokenStream)
 from .clock import SYSTEM_CLOCK, Clock, VirtualClock
+from .encoder import (ENCODE_TASKS, EncodeHandle, EncodeRequest,
+                      EncodeResult)
 from .engine import ServingEngine
 from .kv_cache import SlotKVCache
 from .loadgen import (SLO, Arrival, LoadResult, VirtualCost, Workload,
@@ -46,10 +55,14 @@ from .loadgen import (SLO, Arrival, LoadResult, VirtualCost, Workload,
 from .metrics import ServeMetrics
 from .prefix_cache import PrefixCache
 from .scheduler import Scheduler
+from .tenants import MultiTenantEngine, QuotaExceededError, TenantState
 
-__all__ = ["Arrival", "Clock", "FINISH_REASONS", "GenerationRequest",
-           "GenerationResult", "LoadResult", "PrefixCache", "QueueFullError",
-           "Request", "SLO", "SYSTEM_CLOCK", "SamplingParams", "Scheduler",
-           "ServeMetrics", "ServingEngine", "SlotKVCache", "TokenStream",
-           "VirtualClock", "VirtualCost", "Workload", "bootstrap_summary",
-           "make_arrivals", "run_load", "run_trials", "trace_arrivals"]
+__all__ = ["Arrival", "Clock", "ENCODE_TASKS", "EncodeHandle",
+           "EncodeRequest", "EncodeResult", "FINISH_REASONS",
+           "GenerationRequest", "GenerationResult", "LoadResult",
+           "MultiTenantEngine", "PrefixCache", "QueueFullError",
+           "QuotaExceededError", "Request", "SLO", "SYSTEM_CLOCK",
+           "SamplingParams", "Scheduler", "ServeMetrics", "ServingEngine",
+           "SlotKVCache", "TenantState", "TokenStream", "VirtualClock",
+           "VirtualCost", "Workload", "bootstrap_summary", "make_arrivals",
+           "run_load", "run_trials", "trace_arrivals"]

@@ -1,6 +1,11 @@
 """Serving engine: prefill/decode-separated step loop (DESIGN.md §7) behind
-the streaming generation API (DESIGN.md §10), with shared-prefix KV reuse and
-batched bucketed prefill (DESIGN.md §11).
+the streaming generation API (DESIGN.md §10), with shared-prefix KV reuse,
+batched bucketed prefill (DESIGN.md §11), and prefill-only encode traffic
+(DESIGN.md §14) — classify/embed/score requests that resolve in the step
+that admits them, either on a mode='encoder' plan (bidirectional int4 BERT,
+per-row length masking keeps bucket padding bit-exact) or interleaved with
+decode traffic on a generation engine (task='score' = prompt
+log-likelihood).
 
 Two-phase execution over a deployed model (``repro.deploy.DeployedModel``, or
 a raw params tree plus its ``ExecutionPlan``):
@@ -49,9 +54,11 @@ import numpy as np
 from ..deploy import DeployedModel, ExecutionPlan
 from ..kernels.kv_pack import kv_buffer_keys
 from ..models import api as model_api
+from ..models.bert import bert_encode, bert_pool
 from .api import (GenerationRequest, SamplingParams, TokenStream,
                   sample_batch, sample_token)
 from .clock import SYSTEM_CLOCK, Clock
+from .encoder import EncodeHandle, EncodeRequest
 from .kv_cache import SlotKVCache
 from .metrics import ServeMetrics
 from .prefix_cache import PrefixCache
@@ -81,7 +88,8 @@ class ServingEngine:
                  slots: int = 8, max_len: int = 512,
                  max_queue: Optional[int] = None,
                  metrics: Optional[ServeMetrics] = None,
-                 clock: Clock = SYSTEM_CLOCK):
+                 clock: Clock = SYSTEM_CLOCK,
+                 tenant: Optional[str] = None):
         if isinstance(model, DeployedModel):
             if plan is not None and plan != model.plan:
                 raise ValueError(
@@ -99,6 +107,8 @@ class ServingEngine:
         self.params = params
         self.slots = slots
         self.max_len = max_len
+        self.mode = plan.mode                 # "decode" | "encoder"
+        self.tenant = tenant                  # metrics label (DESIGN.md §14)
         self.dtype = plan.jnp_dtype           # the ONE serving decode dtype
         self.kv_bits = plan.kv_bits
         self.prefill_mode = plan.prefill_mode
@@ -114,8 +124,13 @@ class ServingEngine:
         self.metrics = (metrics if metrics is not None
                         else ServeMetrics(clock=clock))
         self.generated: list[list[int]] = [[] for _ in range(slots)]
-        self._streams: dict[int, TokenStream] = {}
+        self._streams: dict = {}              # rid -> TokenStream|EncodeHandle
         self._events: list[tuple[int, int]] = []
+        # per-step work counters, reset by engine_step: the multi-tenant
+        # deficit accounting and the virtual-cost model read them after
+        # each pump (DESIGN.md §14).
+        self.last_step_tokens = 0
+        self.last_step_encode_tokens = 0
         # per-slot sampling state, threaded into the jitted step alongside
         # the decode state (DESIGN.md §10): seed/temperature/top_k/top_p are
         # set at admit; the step index is the slot's generated-token count.
@@ -126,7 +141,13 @@ class ServingEngine:
 
         self.prefix_cache: Optional[PrefixCache] = None
         self._prefix_refs: dict[int, tuple] = {}   # rid -> pinned block keys
-        if self.prefill_mode == "chunked":
+        self._encode_fns: dict[tuple, callable] = {}
+        if self.mode == "encoder":
+            # prefill-only: no KV retained across steps, no decode state —
+            # every request resolves inside the step that admits it.
+            self.kv = None
+            self.state = None
+        elif self.prefill_mode == "chunked":
             self.kv = SlotKVCache.from_plan(plan, slots, max_len)
             self.state = None
             self._prefill_fns: dict[tuple, callable] = {}
@@ -158,6 +179,10 @@ class ServingEngine:
         requests are rejected HERE, for both prefill modes — by decode time
         the bad prompt would have been scattered into the cache (or indexed
         at [-1]) already."""
+        if self.mode == "encoder":
+            raise ValueError(
+                "this engine serves a mode='encoder' plan: no decode loop "
+                "exists; submit EncodeRequests via submit_encode")
         self.scheduler.assign_id(req)      # so rejections carry a real rid
         plen = len(req.prompt)
         if plen <= 0:
@@ -185,6 +210,52 @@ class ServingEngine:
             self._streams.pop(req.rid, None)
             raise
         return stream
+
+    def submit_encode(self, req: EncodeRequest, *,
+                      on_result: Optional[Callable[[int, object], None]] = None
+                      ) -> EncodeHandle:
+        """Enqueue a prefill-only request (DESIGN.md §14). Shares the
+        scheduler — priority heap, bounded queue, deadline shed, cancel —
+        with generation traffic; the result lands on the returned
+        :class:`EncodeHandle`. Task support is family-shaped: an encoder
+        plan serves classify/embed/score from its heads, while a decode
+        engine serves ``score`` only (prompt log-likelihood through the
+        same batched bucketed prefill path)."""
+        self.scheduler.assign_id(req)      # so rejections carry a real rid
+        plen = len(req.tokens)
+        if plen <= 0:
+            raise ValueError(f"request {req.rid}: empty input")
+        if plen > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: input ({plen}) exceeds engine max_len "
+                f"({self.max_len})")
+        if self.mode == "encoder":
+            needs = ("classifier",) if req.task in ("classify", "score") \
+                else ("pooler",)
+            for head in needs:
+                if head not in self.params:
+                    raise ValueError(
+                        f"request {req.rid}: task={req.task!r} needs a "
+                        f"{head!r} head the deployed artifact does not have")
+        else:
+            if self.prefill_mode != "chunked":
+                raise ValueError(
+                    f"request {req.rid}: token-mode engines feed prompts "
+                    "through a shared cursor and cannot serve prefill-only "
+                    "requests")
+            if req.task != "score":
+                raise ValueError(
+                    f"request {req.rid}: a decoder artifact serves only "
+                    f"task='score' (prompt log-likelihood), got "
+                    f"{req.task!r}")
+        handle = EncodeHandle(self, req, on_result=on_result)
+        self._streams[req.rid] = handle
+        try:
+            self.scheduler.submit(req)     # may raise QueueFullError
+        except Exception:
+            self._streams.pop(req.rid, None)
+            raise
+        return handle
 
     def cancel(self, rid: int) -> bool:
         """Cancel a queued or mid-flight request. An occupied slot is freed
@@ -241,7 +312,11 @@ class ServingEngine:
         Returns the ``(rid, token)`` pairs emitted this step (streams and
         callbacks are fed from inside)."""
         self._events = []
-        if self.prefill_mode == "chunked":
+        self.last_step_tokens = 0
+        self.last_step_encode_tokens = 0
+        if self.mode == "encoder":
+            self._encoder_step()
+        elif self.prefill_mode == "chunked":
             self._chunked_step()
         else:
             self._token_step()
@@ -259,20 +334,23 @@ class ServingEngine:
         placed = self.scheduler.admit(fits=fits)
         for s, req in placed:
             self.generated[s] = []
-            sp = req.sampling
-            self._seed[s] = np.int32(sp.seed & 0x7FFFFFFF)
-            self._temp[s] = sp.temperature
-            self._topk[s] = sp.top_k
-            self._topp[s] = sp.top_p
+            sp = getattr(req, "sampling", None)  # EncodeRequests don't sample
+            if sp is not None:
+                self._seed[s] = np.int32(sp.seed & 0x7FFFFFFF)
+                self._temp[s] = sp.temperature
+                self._topk[s] = sp.top_k
+                self._topp[s] = sp.top_p
             if req.queue_wait_s is not None:
-                self.metrics.record_wait("queue_wait", req.queue_wait_s)
+                self.metrics.record_wait("queue_wait", req.queue_wait_s,
+                                         tenant=self.tenant)
         return placed
 
     def _emit(self, req: GenerationRequest, token: int) -> None:
         if req.first_token_t is None:
             req.first_token_t = self.clock()
             if req.ttft_s is not None:
-                self.metrics.record_wait("ttft", req.ttft_s)
+                self.metrics.record_wait("ttft", req.ttft_s,
+                                         tenant=self.tenant)
         stream = self._streams.get(req.rid)
         if stream is not None:
             stream._push(token)
@@ -288,24 +366,31 @@ class ServingEngine:
         if keys and self.prefix_cache is not None:
             self.prefix_cache.release(keys)
 
-    def _finalize_unslotted(self, req: GenerationRequest,
-                            reason: str) -> None:
+    def _finalize_unslotted(self, req, reason: str) -> None:
         """Finish a request that never occupied a slot (queued-cancel or
         deadline shed): empty output, straight to done."""
-        req.out = np.zeros(0, np.int32)
+        if isinstance(req, EncodeRequest):
+            req.result = None
+        else:
+            req.out = np.zeros(0, np.int32)
         req.finish_reason = reason
+        req.finish_t = self.clock()
         self.scheduler.done.append(req)
         self._release_prefix(req)
         self._close_stream(req)
 
-    def _finalize_slotted(self, slot: int, req: GenerationRequest,
-                          reason: str) -> None:
+    def _finalize_slotted(self, slot: int, req, reason: str) -> None:
         """The ONE exit path for slotted requests (length/stop/cancel):
         output truncated to the request's own ``max_new_tokens``, slot
-        returned to the scheduler, prefix pins released, stream closed."""
-        req.out = np.array(self.generated[slot][:req.max_new_tokens],
-                           np.int32)
+        returned to the scheduler, prefix pins released, stream closed.
+        Encode requests hold a slot only within the step that admits them;
+        their result (set by ``_encode_group``, None if cancelled first)
+        rides on the request itself."""
+        if not isinstance(req, EncodeRequest):
+            req.out = np.array(self.generated[slot][:req.max_new_tokens],
+                               np.int32)
         req.finish_reason = reason
+        req.finish_t = self.clock()
         self.scheduler.complete(slot)
         self._release_prefix(req)
         self._close_stream(req)
@@ -417,7 +502,9 @@ class ServingEngine:
             firsts.append(self._sample_first(logits[i, plen - 1], s))
             self.kv.reset_slot(s)
             self.kv.insert_prefill(s, pstate, plen, bucket, row=i)
-        self.metrics.record("prefill", self.clock() - t0, total)
+        self.metrics.record("prefill", self.clock() - t0, total,
+                            tenant=self.tenant)
+        self.last_step_tokens += total
         self._emit_first_tokens(group, firsts)
 
     def _prefill_group_blocks(self, bucket: int, m: int, keys, group) -> None:
@@ -467,7 +554,9 @@ class ServingEngine:
             self.kv.reset_slot(s)
             self.kv.insert_rows(s, state, plen, copy, row=i)
             self._publish_prefix(req, m, state, i)
-        self.metrics.record("prefill", self.clock() - t0, total)
+        self.metrics.record("prefill", self.clock() - t0, total,
+                            tenant=self.tenant)
+        self.last_step_tokens += total
         self._emit_first_tokens(group, firsts)
 
     def _publish_prefix(self, req: GenerationRequest, m: int, state,
@@ -489,6 +578,102 @@ class ServingEngine:
 
         self.prefix_cache.insert(req.prompt, upto, rows_for_block)
 
+    # -------------------------------------------------------------- encode
+    def _encode_fn(self, bucket: int, n: int):
+        """Batch-n prefill-only forward, compiled once per (bucket, n) —
+        the same compile-key space as ``_prefill_fn``. Encoder plans run the
+        bidirectional stack with per-row length masking (bucket padding
+        stays bit-exact, see serving/encoder.py) and return every head the
+        artifact carries; decode plans return the prompt log-likelihood
+        (causal attention, so padded tails are free) as ``score``."""
+        fn = self._encode_fns.get((bucket, n))
+        if fn is None:
+            cfg, segments, plan = self.cfg, self.segments, self.plan
+            if self.mode == "encoder":
+                has_cls = "classifier" in self.params
+
+                def ef(params, tokens, lengths):
+                    h, _ = bert_encode(params, cfg, segments, tokens,
+                                       lengths=lengths)
+                    out = {"embed": bert_pool(params, h)}
+                    if has_cls:
+                        logits = (out["embed"] @ params["classifier"]["w"]
+                                  + params["classifier"]["b"])
+                        logp = jax.nn.log_softmax(
+                            logits.astype(jnp.float32), axis=-1)
+                        out["classify"] = logits
+                        # relevance score: positive-class log-probability
+                        out["score"] = (logp[:, 1] if logits.shape[-1] >= 2
+                                        else logp[:, 0])
+                    return out
+            else:
+                def ef(params, tokens, lengths):
+                    st = plan.decode_state(n, bucket, kv_bits=16)
+                    logits, _, _, _ = model_api.forward(
+                        params, cfg, segments, state=st, tokens=tokens)
+                    logp = jax.nn.log_softmax(
+                        logits.astype(jnp.float32), axis=-1)
+                    ll = jnp.take_along_axis(
+                        logp[:, :-1], tokens[:, 1:, None], -1)[..., 0]
+                    mask = (jnp.arange(bucket - 1)[None, :] + 1
+                            < lengths[:, None])
+                    return {"score": jnp.sum(jnp.where(mask, ll, 0.0),
+                                             axis=1)}
+
+            fn = self._encode_fns[(bucket, n)] = jax.jit(ef)
+        return fn
+
+    def _encode_admitted(self, placed) -> None:
+        """Group this round's encode admissions by bucket and run each
+        group as one forward (``prefill_batch`` caps the group size, n pads
+        to a power of two — the PR-5 grouping, reused verbatim)."""
+        jobs = [(s, req, _bucket_for(len(req.tokens), self.max_len))
+                for s, req in placed]
+        groups = group_admits(jobs, key_fn=lambda j: j[2],
+                              max_batch=self.prefill_batch)
+        for bucket, members in groups:
+            group = [(s, req) for s, req, _ in members
+                     if self.scheduler.active[s] is req]
+            if not group:      # cancelled by a callback mid-round
+                continue
+            self._encode_group(bucket, group)
+
+    def _encode_group(self, bucket: int, group) -> None:
+        """One batched forward; every request resolves (and frees its slot)
+        before this returns — encode requests never outlive their step."""
+        n = _pow2_ceil(len(group))
+        toks = np.zeros((n, bucket), np.int32)
+        lens = np.ones(n, np.int32)      # padding rows: length-1, masked
+        total = 0
+        for i, (s, req) in enumerate(group):
+            plen = len(req.tokens)
+            toks[i, :plen] = req.tokens
+            lens[i] = plen
+            total += plen
+        t0 = self.clock()
+        out = self._encode_fn(bucket, n)(self.params, jnp.asarray(toks),
+                                         jnp.asarray(lens))
+        out = {task: np.asarray(v) for task, v in out.items()}
+        self.metrics.record("encode", self.clock() - t0, total,
+                            tenant=self.tenant)
+        self.last_step_encode_tokens += total
+        self.last_step_tokens += total
+        for i, (s, req) in enumerate(group):
+            if self.scheduler.active[s] is not req:
+                continue   # an earlier on_result callback cancelled it
+            req.result = out[req.task][i]
+            self._finalize_slotted(s, req, "done")
+            if req.latency_s is not None:
+                self.metrics.record_wait("encode_latency", req.latency_s,
+                                         tenant=self.tenant)
+
+    def _encoder_step(self) -> None:
+        """mode='encoder': the whole step is admit + batched encode — there
+        is no decode phase and no KV to carry forward."""
+        placed = self._admit()
+        if placed:
+            self._encode_admitted(placed)
+
     def _gen_steps(self) -> np.ndarray:
         """Per-slot index of the NEXT generated token (the sampling step fed
         to ``fold_in``), so token i of a request always draws from the same
@@ -499,7 +684,16 @@ class ServingEngine:
     def _chunked_step(self) -> None:
         placed = self._admit()
         if placed:
-            self._prefill_admitted(placed)
+            # encode and generation traffic arrive through one admit round:
+            # encode jobs resolve immediately (freeing their slots), then
+            # the generation jobs prefill and join the decode batch below.
+            enc = [(s, r) for s, r in placed if isinstance(r, EncodeRequest)]
+            gen = [(s, r) for s, r in placed
+                   if not isinstance(r, EncodeRequest)]
+            if enc:
+                self._encode_admitted(enc)
+            if gen:
+                self._prefill_admitted(gen)
         active = self.scheduler.active_slots()
         if not active:
             return
@@ -512,7 +706,9 @@ class ServingEngine:
             self._seed, self._gen_steps(), self._temp, self._topk,
             self._topp)
         next_tok = np.asarray(next_tok)
-        self.metrics.record("decode", self.clock() - t0, len(active))
+        self.metrics.record("decode", self.clock() - t0, len(active),
+                            tenant=self.tenant)
+        self.last_step_tokens += len(active)
         for s in active:
             req = self.scheduler.active[s]
             if req is None:    # freed mid-step by an on_token cancel()
@@ -577,7 +773,9 @@ class ServingEngine:
         n_decoding = sum(
             self.pos[s] >= len(self.scheduler.active[s].prompt) - 1
             for s in active)
-        self.metrics.record("decode", self.clock() - t0, n_decoding)
+        self.metrics.record("decode", self.clock() - t0, n_decoding,
+                            tenant=self.tenant)
+        self.last_step_tokens += len(active)
         for s in active:
             req = self.scheduler.active[s]
             if req is None:    # freed mid-step by an on_token cancel()

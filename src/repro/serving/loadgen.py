@@ -42,6 +42,7 @@ import numpy as np
 
 from .api import GenerationRequest, QueueFullError, SamplingParams
 from .clock import VirtualClock
+from .encoder import EncodeRequest
 
 __all__ = ["SLO", "Workload", "Arrival", "VirtualCost", "RequestRecord",
            "LoadResult", "make_arrivals", "trace_arrivals", "load_trace",
@@ -73,6 +74,10 @@ class VirtualCost:
 
     decode_step_s: float = 0.01
     prefill_per_token_s: float = 0.001
+    #: per-token surcharge for prefill-only encode work resolved this step
+    #: (read off ``engine.last_step_encode_tokens`` — encode requests emit
+    #: no token events to infer it from)
+    encode_per_token_s: float = 0.001
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,6 +100,14 @@ class Workload:
                         [1, cancel_after_tokens]) — exercises slotted
                         cancellation; queued cancels come out of deadline +
                         overload mixes.
+    encode_frac         fraction offered as prefill-only EncodeRequests
+                        (task ``encode_task``, DESIGN.md §14); 1.0 is a
+                        pure encoder workload. The extra RNG draw only
+                        happens when the fraction is nonzero, so existing
+                        workloads replay bit-identically.
+    tenant              route every request of this workload to the named
+                        tenant of a multi-tenant engine (None: the plain
+                        single-engine submit surface).
     """
 
     n_requests: int = 32
@@ -110,6 +123,9 @@ class Workload:
     deadline_s: Optional[float] = None
     cancel_frac: float = 0.0
     cancel_after_tokens: int = 2
+    encode_frac: float = 0.0
+    encode_task: str = "classify"
+    tenant: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -124,6 +140,8 @@ class Arrival:
     priority: int = 0
     deadline_s: Optional[float] = None
     cancel_after_tokens: Optional[int] = None
+    task: Optional[str] = None      # encode task; None = generation request
+    tenant: Optional[str] = None    # multi-tenant routing label
 
     @property
     def prompt_len(self) -> int:
@@ -153,13 +171,18 @@ def make_arrivals(w: Workload, seed: int = 0) -> list[Arrival]:
                     and rng.random() < w.deadline_frac else None)
         cancel = (int(rng.integers(1, w.cancel_after_tokens + 1))
                   if rng.random() < w.cancel_frac else None)
+        # guarded draw: workloads with encode_frac=0 consume the exact RNG
+        # sequence they did before encode traffic existed
+        task = (w.encode_task if w.encode_frac
+                and rng.random() < w.encode_frac else None)
         out.append(Arrival(
             t=t, prompt=prompt,
             max_new_tokens=int(rng.integers(w.new_tokens[0],
                                             w.new_tokens[1] + 1)),
             sampling=sampling,
             priority=int(rng.choice(w.priorities)),
-            deadline_s=deadline, cancel_after_tokens=cancel))
+            deadline_s=deadline, cancel_after_tokens=cancel,
+            task=task, tenant=w.tenant))
     return out
 
 
@@ -206,8 +229,9 @@ def load_trace(path: str) -> list:
 
 # ----------------------------------------------------------------- records
 #: terminal states a record can reach; engine FINISH_REASONS plus the
-#: generator-side ``rejected`` (QueueFullError backpressure at submit).
-RECORD_OUTCOMES = ("length", "stop", "cancelled", "shed", "rejected")
+#: encode-path ``done`` and the generator-side ``rejected`` (QueueFullError
+#: backpressure — including tenant quota — at submit).
+RECORD_OUTCOMES = ("length", "stop", "done", "cancelled", "shed", "rejected")
 
 
 @dataclasses.dataclass
@@ -222,6 +246,8 @@ class RequestRecord:
     priority: int
     deadline_s: Optional[float]
     injected_cancel: bool            # generator planned to cancel this one
+    task: Optional[str] = None       # encode task; None = generation
+    tenant: Optional[str] = None
     rid: int = -1
     token_times: list = dataclasses.field(default_factory=list)
     tokens: list = dataclasses.field(default_factory=list)
@@ -240,7 +266,18 @@ class RequestRecord:
         ts = self.token_times
         return [b - a for a, b in zip(ts, ts[1:])]
 
+    @property
+    def encode_latency_s(self) -> Optional[float]:
+        """Submit → result for encode records (the one-shot TTFT analogue)."""
+        if self.task is None or self.finish_t is None:
+            return None
+        return self.finish_t - self.submit_t
+
     def slo_ok(self, slo: SLO) -> bool:
+        if self.task is not None:    # encode: one result, judged like a TTFT
+            return (self.finish_reason == "done"
+                    and self.encode_latency_s is not None
+                    and self.encode_latency_s <= slo.ttft_s)
         if self.finish_reason not in ("length", "stop"):
             return False
         if self.ttft_s is None or self.ttft_s > slo.ttft_s:
@@ -281,7 +318,7 @@ class LoadResult:
             "n_counted": len(counted),
             "n_good": len(good),
             "goodput": len(good) / max(len(counted), 1),
-            "n_completed": by["length"] + by["stop"],
+            "n_completed": by["length"] + by["stop"] + by["done"],
             "n_shed": by["shed"],
             "n_cancelled": by["cancelled"],
             "n_rejected": by["rejected"],
@@ -294,7 +331,9 @@ class LoadResult:
                 ("ttft", [r.ttft_s for r in recs if r.ttft_s is not None]),
                 ("itl", [g for r in recs for g in r.gaps_s]),
                 ("queue_wait", [r.queue_wait_s for r in recs
-                                if r.queue_wait_s is not None])):
+                                if r.queue_wait_s is not None]),
+                ("encode_latency", [r.encode_latency_s for r in recs
+                                    if r.encode_latency_s is not None])):
             for k, v in _pcts_ms(samples).items():
                 out[f"{name}_{k}"] = v
         return out
@@ -336,18 +375,30 @@ def run_load(engine, arrivals: Sequence[Arrival], *,
         while idx < len(arrivals) and arrivals[idx].t <= now:
             a = arrivals[idx]
             idx += 1
-            req = GenerationRequest(
-                prompt=a.prompt, max_new_tokens=a.max_new_tokens,
-                sampling=a.sampling, priority=a.priority,
-                deadline_s=a.deadline_s)
+            if a.task is not None:
+                req = EncodeRequest(tokens=a.prompt, task=a.task,
+                                    priority=a.priority,
+                                    deadline_s=a.deadline_s)
+            else:
+                req = GenerationRequest(
+                    prompt=a.prompt, max_new_tokens=a.max_new_tokens,
+                    sampling=a.sampling, priority=a.priority,
+                    deadline_s=a.deadline_s)
             rec = RequestRecord(
                 index=idx - 1, arrival_t=a.t, submit_t=clock(),
                 prompt_len=a.prompt_len, max_new_tokens=a.max_new_tokens,
                 priority=a.priority, deadline_s=a.deadline_s,
-                injected_cancel=a.cancel_after_tokens is not None)
+                injected_cancel=a.cancel_after_tokens is not None,
+                task=a.task, tenant=a.tenant)
             records.append(rec)
+            # multi-tenant engines take the routing label; the single-engine
+            # surface has no tenant kwarg, so only pass it when set
+            kw = {} if a.tenant is None else {"tenant": a.tenant}
             try:
-                stream = engine.submit(req)
+                if a.task is not None:
+                    stream = engine.submit_encode(req, **kw)
+                else:
+                    stream = engine.submit(req, **kw)
             except QueueFullError:
                 rec.rid = req.rid
                 rec.finish_reason = "rejected"
@@ -383,8 +434,10 @@ def run_load(engine, arrivals: Sequence[Arrival], *,
                 rec.prompt_len for rid in {r for r, _ in events}
                 if (rec := by_rid.get(rid)) is not None
                 and not rec.token_times)
+            encode_tokens = getattr(engine, "last_step_encode_tokens", 0)
             clock.advance(cost.decode_step_s
-                          + cost.prefill_per_token_s * prefill_tokens)
+                          + cost.prefill_per_token_s * prefill_tokens
+                          + cost.encode_per_token_s * encode_tokens)
         now = clock()
         for rid, tok in events:
             rec = by_rid.get(rid)
@@ -466,12 +519,30 @@ def bootstrap_summary(results: Sequence[LoadResult], slo: SLO, *,
     out["duration_s"] = float(sum(res.duration_s for res in results))
     if len(indicators):
         out["goodput"] = _boot_ci(indicators, np.mean, rng, n_boot, level)
+    tenants = sorted({r.tenant for res in results for r in res.records
+                      if r.tenant is not None})
+    if tenants:
+        # per-tenant point estimates (no CIs: the fair-share gate compares
+        # whole-tenant counts, which are deterministic per seed set)
+        out["by_tenant"] = {}
+        for name in tenants:
+            cnt = [r for res in results for r in res.counted()
+                   if r.tenant == name]
+            good = sum(r.slo_ok(slo) for r in cnt)
+            comp = sum(r.finish_reason in ("length", "stop", "done")
+                       for r in cnt)
+            out["by_tenant"][name] = {
+                "n_counted": len(cnt), "n_completed": comp, "n_good": good,
+                "goodput": good / max(len(cnt), 1)}
     pools = {
         "ttft": [r.ttft_s for res in results for r in res.records
                  if r.ttft_s is not None],
         "itl": [g for res in results for r in res.records for g in r.gaps_s],
         "queue_wait": [r.queue_wait_s for res in results for r in res.records
                        if r.queue_wait_s is not None],
+        "encode_latency": [r.encode_latency_s for res in results
+                           for r in res.records
+                           if r.encode_latency_s is not None],
     }
     for name, samples in pools.items():
         if not samples:

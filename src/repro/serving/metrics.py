@@ -1,20 +1,27 @@
 """Latency/throughput recorder for the serving engine (DESIGN.md §7/§10/§11).
 
-Records (kind, seconds, tokens) step events — kind is 'prefill' or 'decode'
-— plus per-request wait samples ('ttft': submit → first emitted token,
-'queue_wait': submit → slot admission), and summarizes tokens/sec, p50/p99
-step latency per kind and p50/p99 of the per-request waits. Wait samples are
-kept OUT of the busy-time denominator — queueing is not compute, so it must
-not deflate tokens/sec. Pure host-side bookkeeping; never touches device
-state.
+Records (kind, seconds, tokens) step events — kind is 'prefill', 'decode' or
+'encode' (the prefill-only request path, DESIGN.md §14) — plus per-request
+wait samples ('ttft': submit → first emitted token, 'queue_wait': submit →
+slot admission, 'encode_latency': submit → encode result), and summarizes
+tokens/sec, p50/p99 step latency per kind and p50/p99 of the per-request
+waits. Wait samples are kept OUT of the busy-time denominator — queueing is
+not compute, so it must not deflate tokens/sec. Pure host-side bookkeeping;
+never touches device state.
+
+Multi-tenancy: ``record``/``record_wait`` take an optional ``tenant`` label.
+Labeled events additionally roll up into plain-integer per-(tenant, kind)
+counters — tokens and sample counts only, never sample lists — surfaced
+under the summary's ``by_label`` key, so a shared-process deployment
+(serving/tenants.py) can prove per-tenant progress without per-tenant
+metric objects.
 
 Memory discipline: a long-lived engine records events forever, so the raw
 sample lists are bounded deques (``window`` samples per stream, default
 65536; ``None`` keeps everything for offline analysis). Percentiles and
 tokens/sec then describe the most recent window. ``pop_summary()`` is the
 drain form — summarize-and-reset, the same non-leaking consumption pattern
-as ``Scheduler.pop_done()`` — and is what ``benchmarks/serve_latency`` uses
-between bursts.
+as ``Scheduler.pop_done()`` — and drains the labeled counters too.
 
 Prefix-cache counters (DESIGN.md §11) are plain integers (never grow):
 ``record_prefix(reused, prompt_tokens)`` per admission feeds the
@@ -30,8 +37,11 @@ import numpy as np
 
 from .clock import Clock
 
+#: step-event kinds recorded via ``record``
+STEP_KINDS = ("prefill", "decode", "encode")
+
 #: per-request wait kinds recorded via ``record_wait``
-WAIT_KINDS = ("ttft", "queue_wait")
+WAIT_KINDS = ("ttft", "queue_wait", "encode_latency")
 
 #: default bounded-window length (samples kept per stream)
 DEFAULT_WINDOW = 65536
@@ -40,7 +50,10 @@ DEFAULT_WINDOW = 65536
 def _pcts(lat: np.ndarray) -> tuple[float, float]:
     """p50/p99 with the sub-2-sample guard: interpolating percentiles over a
     lone sample is meaningless and np.percentile warns/raises on degenerate
-    inputs depending on dtype — report the sample as every percentile."""
+    inputs depending on dtype — report the sample as every percentile (and
+    refuse an empty window outright: callers skip those)."""
+    if len(lat) == 0:
+        raise ValueError("percentiles of an empty window")
     if len(lat) < 2:
         return float(lat[0] * 1e3), float(lat[0] * 1e3)
     return (float(np.percentile(lat, 50) * 1e3),
@@ -65,14 +78,28 @@ class ServeMetrics:
         self._prefix_hits = 0
         self._prefix_reused = 0
         self._prefix_prompt_tokens = 0
+        # (tenant, kind) -> [events, tokens] and (tenant, wait-kind) -> n:
+        # plain counters so N tenants cost O(N) ints, not N sample windows.
+        self._label_steps: dict[tuple[str, str], list[int]] = {}
+        self._label_waits: dict[tuple[str, str], int] = {}
 
-    def record(self, kind: str, seconds: float, tokens: int) -> None:
+    def record(self, kind: str, seconds: float, tokens: int,
+               tenant: Optional[str] = None) -> None:
+        assert kind in STEP_KINDS, kind
         self._events.append((kind, seconds, tokens))
+        if tenant is not None:
+            cell = self._label_steps.setdefault((tenant, kind), [0, 0])
+            cell[0] += 1
+            cell[1] += tokens
 
-    def record_wait(self, kind: str, seconds: float) -> None:
-        """Per-request wait sample: 'ttft' or 'queue_wait'."""
+    def record_wait(self, kind: str, seconds: float,
+                    tenant: Optional[str] = None) -> None:
+        """Per-request wait sample: 'ttft', 'queue_wait', 'encode_latency'."""
         assert kind in WAIT_KINDS, kind
         self._waits.append((kind, seconds))
+        if tenant is not None:
+            key = (tenant, kind)
+            self._label_waits[key] = self._label_waits.get(key, 0) + 1
 
     def record_prefix(self, reused: int, prompt_tokens: int) -> None:
         """One admission's prefix-cache outcome: ``reused`` prompt tokens
@@ -88,10 +115,20 @@ class ServeMetrics:
         toks = sum(t for k, _, t in self._events if k == kind)
         return lat, toks
 
+    def _by_label(self) -> dict:
+        """Per-tenant rollups keyed ``'<tenant>/<kind>'`` (string keys so
+        the dict survives a JSON round-trip in benchmark artifacts)."""
+        out: dict = {}
+        for (tenant, kind), (steps, toks) in sorted(self._label_steps.items()):
+            out[f"{tenant}/{kind}"] = {"steps": steps, "tokens": toks}
+        for (tenant, kind), n in sorted(self._label_waits.items()):
+            out.setdefault(f"{tenant}/{kind}", {})["n"] = n
+        return out
+
     def summary(self) -> dict:
         out: dict = {"wall_s": self._clock() - self._t0}
         total_tokens = 0
-        for kind in ("prefill", "decode"):
+        for kind in STEP_KINDS:
             lat, toks = self._kind(kind)
             total_tokens += toks
             if len(lat) == 0:
@@ -119,12 +156,14 @@ class ServeMetrics:
             out["prefill_tokens_saved"] = self._prefix_reused
             out["prefix_reuse_frac"] = (
                 self._prefix_reused / max(self._prefix_prompt_tokens, 1))
+        if self._label_steps or self._label_waits:
+            out["by_label"] = self._by_label()
         return out
 
     def pop_summary(self) -> dict:
         """Summarize-and-reset: the bounded-memory way to consume metrics
-        from a long-lived engine (windows, counters and the wall clock all
-        restart)."""
+        from a long-lived engine (windows, per-tenant counters and the wall
+        clock all restart)."""
         out = self.summary()
         self._reset()
         return out
@@ -132,7 +171,7 @@ class ServeMetrics:
     def report(self) -> str:
         s = self.summary()
         parts = [f"{s['total_tokens']} tok @ {s['tokens_per_s']:.1f} tok/s"]
-        for kind in ("prefill", "decode"):
+        for kind in STEP_KINDS:
             if f"{kind}_steps" in s:
                 parts.append(
                     f"{kind}: {s[f'{kind}_steps']} steps "
@@ -147,4 +186,8 @@ class ServeMetrics:
             parts.append(
                 f"prefix: {s['prefix_hit_rate']:.0%} hit, "
                 f"{s['prefill_tokens_saved']} tok saved")
+        for label, cell in s.get("by_label", {}).items():
+            if "tokens" in cell:
+                parts.append(f"{label}: {cell['tokens']} tok "
+                             f"in {cell['steps']} steps")
         return " | ".join(parts)

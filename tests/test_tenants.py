@@ -1,0 +1,204 @@
+"""MultiTenantEngine tests: fair share, quotas, shared rid space
+(DESIGN.md §14).
+
+The fair-share property is checked as the DRR invariant itself, on a
+``VirtualClock`` so the step sequence is exact: while two tenants both have
+work, neither runs more than its deficit bound of consecutive steps — so a
+modest encoder tenant finishes long before a flooded decoder tenant drains,
+instead of starving behind it. Quota and lifecycle tests pin the submit-side
+isolation: a tenant spending its token budget is rejected without touching
+its neighbours, and every rid names a request process-wide.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.policy import QuantPolicy
+from repro.deploy import ExecutionPlan, deploy
+from repro.models import api
+from repro.models.bert import init_bert_classifier, tinybert_config
+from repro.serving import (EncodeRequest, GenerationRequest,
+                           MultiTenantEngine, QuotaExceededError,
+                           ServingEngine, VirtualClock)
+
+KEY = jax.random.PRNGKey(0)
+_CACHE = {}
+
+
+def _encoder_model():
+    if "enc" not in _CACHE:
+        cfg = tinybert_config(num_classes=2, layers=2, d=64, heads=4,
+                              d_ff=128, vocab=256, name="tinybert-test")
+        pol = QuantPolicy(num_layers=cfg.num_layers, mode="int",
+                          last_k_int4=cfg.num_layers)
+        plan = ExecutionPlan.build(cfg, pol, backend="reference", act_bits=4,
+                                   mode="encoder", prefill_batch=4)
+        _CACHE["enc"] = deploy(init_bert_classifier(cfg, 2, KEY), plan)
+    return _CACHE["enc"]
+
+
+def _decoder_model():
+    if "dec" not in _CACHE:
+        cfg = reduced(get_config("stablelm-3b")).replace(act="gelu")
+        pol = QuantPolicy(num_layers=cfg.num_layers, mode="int",
+                          last_k_int4=cfg.num_layers)
+        plan = ExecutionPlan.build(cfg, pol, backend="reference", act_bits=4)
+        _CACHE["dec"] = (deploy(api.init_model(cfg, KEY), plan), cfg)
+    return _CACHE["dec"]
+
+
+def _enc_req(plen, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    return EncodeRequest(tokens=rng.integers(1, 256, plen), **kw)
+
+
+def _gen_req(plen, max_new, vocab, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    return GenerationRequest(prompt=rng.integers(1, vocab, plen
+                                                 ).astype(np.int32),
+                             max_new_tokens=max_new, **kw)
+
+
+def _mt(quantum=32):
+    mt = MultiTenantEngine(clock=VirtualClock(), quantum_tokens=quantum)
+    mt.add_tenant("cls", _encoder_model(), slots=2, max_len=64)
+    dec, _ = _decoder_model()
+    mt.add_tenant("gen", dec, slots=2, max_len=64)
+    return mt
+
+
+# ------------------------------------------------------- fair share / DRR
+def test_no_starvation_under_adversarial_flood():
+    """A flooded decoder tenant must not starve a modest encoder tenant:
+    while both have work, no tenant runs more than its DRR deficit bound of
+    consecutive steps, and the modest tenant finishes while the flood is
+    still draining."""
+    quantum = 32
+    mt = _mt(quantum=quantum)
+    dec, cfg = _decoder_model()
+    # adversarial: the flood is submitted FIRST and outweighs cls ~10x
+    flood = [mt.submit(_gen_req(8, 6, cfg.vocab_size, seed=i),
+                       tenant="gen") for i in range(10)]
+    done_at = {}
+    cls = [mt.submit_encode(_enc_req(8, seed=i), tenant="cls",
+                            on_result=lambda rid, v: done_at.setdefault(
+                                rid, len(trace)))
+           for i in range(4)]
+
+    # instrument which tenant each engine_step serves
+    trace = []
+    for name, t in mt.tenants.items():
+        real = t.engine.engine_step
+        t.engine.engine_step = (lambda n=name, f=real: (trace.append(n),
+                                                        f())[1])
+
+    steps = mt.run_until_drained()
+    assert steps == len(trace)
+    for h in cls:
+        assert h.finish_reason == "done"
+    for s in flood:
+        assert s.request.finish_reason in ("length", "stop")
+
+    # the modest tenant resolved while the flood still had work queued
+    last_cls = max(done_at[h.rid] for h in cls)
+    assert "gen" in trace[last_cls:]         # the flood kept draining after
+    assert last_cls < len(trace) / 2         # ...and cls never waited on it
+
+    # DRR bound: each step pays >= 1 token against a deficit of at most
+    # weight * quantum (+ one step of overshoot), so a tenant's turn can
+    # never exceed quantum + 1 consecutive steps while others wait
+    run_len, prev = 0, None
+    for name in trace:
+        run_len = run_len + 1 if name == prev else 1
+        prev = name
+        assert run_len <= quantum + 1
+
+
+def test_idle_tenants_cost_nothing():
+    """Work conservation: with only one tenant active, every step serves it
+    (idle tenants are skipped, their deficit reset)."""
+    mt = _mt()
+    h = mt.submit_encode(_enc_req(6), tenant="cls")
+    mt.engine_step()
+    assert h.finish_reason == "done"
+    assert mt.tenants["gen"].deficit == 0.0
+    assert mt.engine_step() == []            # fully drained: no-op
+
+
+def test_handle_pumps_the_drr_loop():
+    """Handles submitted through the MT engine pump the DRR loop, not just
+    their own tenant."""
+    mt = _mt()
+    h = mt.submit_encode(_enc_req(6), tenant="cls")
+    res = h.result()
+    assert res.finish_reason == "done" and res.value.shape == (2,)
+
+
+# ----------------------------------------------------------------- quotas
+def test_token_budget_quota_rejects_and_releases():
+    mt = _mt()
+    mt.tenants["cls"].token_budget = 20
+    h1 = mt.submit_encode(_enc_req(8, seed=1), tenant="cls")
+    h2 = mt.submit_encode(_enc_req(8, seed=2), tenant="cls")
+    assert mt.tenants["cls"].outstanding_tokens == 16
+    with pytest.raises(QuotaExceededError):
+        mt.submit_encode(_enc_req(8, seed=3), tenant="cls")
+    # the rejection consumed nothing — and the other tenant is untouched
+    assert mt.tenants["cls"].outstanding_tokens == 16
+    dec, cfg = _decoder_model()
+    mt.submit(_gen_req(4, 2, cfg.vocab_size), tenant="gen")
+
+    mt.run_until_drained()
+    assert h1.finish_reason == h2.finish_reason == "done"
+    assert mt.tenants["cls"].outstanding_tokens == 0     # budget released
+    mt.submit_encode(_enc_req(8, seed=3), tenant="cls")  # fits again
+
+
+def test_generation_quota_counts_prompt_plus_output():
+    mt = _mt()
+    dec, cfg = _decoder_model()
+    mt.tenants["gen"].token_budget = 10
+    mt.submit(_gen_req(4, 3, cfg.vocab_size), tenant="gen")   # cost 7
+    with pytest.raises(QuotaExceededError):
+        mt.submit(_gen_req(2, 2, cfg.vocab_size), tenant="gen")  # 7+4 > 10
+    mt.submit(_gen_req(1, 2, cfg.vocab_size), tenant="gen")      # 7+3 fits
+
+
+def test_cancel_releases_quota():
+    mt = _mt()
+    mt.tenants["cls"].token_budget = 10
+    h = mt.submit_encode(_enc_req(8), tenant="cls")
+    assert mt.cancel(h.rid)
+    assert h.finish_reason == "cancelled"
+    assert mt.tenants["cls"].outstanding_tokens == 0
+    assert not mt.cancel(12345)              # unknown rid anywhere
+
+
+# ------------------------------------------------- shared rid space / misc
+def test_shared_rid_space_and_pop_done_order():
+    mt = _mt()
+    dec, cfg = _decoder_model()
+    handles = [mt.submit_encode(_enc_req(6, seed=1), tenant="cls"),
+               mt.submit(_gen_req(4, 2, cfg.vocab_size), tenant="gen"),
+               mt.submit_encode(_enc_req(7, seed=2), tenant="cls")]
+    rids = [h.rid if hasattr(h, "rid") else h.request.rid for h in handles]
+    assert rids == sorted(set(rids))         # globally unique, increasing
+    mt.run_until_drained()
+    done = mt.pop_done()
+    assert [r.rid for r in done] == sorted(r.rid for r in done)
+    assert len(done) == 3
+    assert mt.pop_done() == []               # drained
+
+
+def test_registry_validation():
+    mt = MultiTenantEngine(clock=VirtualClock())
+    mt.add_tenant("a", _encoder_model())
+    with pytest.raises(ValueError, match="already registered"):
+        mt.add_tenant("a", _encoder_model())
+    with pytest.raises(ValueError, match="weight"):
+        mt.add_tenant("b", _encoder_model(), weight=0)
+    with pytest.raises(KeyError, match="unknown tenant"):
+        mt.submit_encode(_enc_req(4), tenant="nope")
+    with pytest.raises(ValueError, match="quantum"):
+        MultiTenantEngine(clock=VirtualClock(), quantum_tokens=0)

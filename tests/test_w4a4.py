@@ -283,3 +283,43 @@ def test_search_keeps_all_int8_when_nothing_fits():
     res = search_mixed_precision(3, score, accuracy_floor=0.89)
     assert tuple(res.policy.int4_layers or ()) == ()
     assert res.accuracy == res.base_accuracy == pytest.approx(0.9)
+
+
+def test_search_floor_delta_relative_to_base():
+    """floor_delta without fp_score: the floor hangs off the all-int8 base
+    the search measures anyway — same outcome as the absolute floor."""
+    cost = {0: 0.0, 1: 0.01, 2: 0.2, 3: 0.0}
+
+    def score(pol):
+        return 0.9 - sum(cost[l] for l in (pol.int4_layers or ()))
+
+    res = search_mixed_precision(4, score, floor_delta=0.02)
+    assert res.floor == pytest.approx(0.88)
+    assert sorted(res.policy.int4_layers) == [0, 1, 3]
+    assert res.accuracy == pytest.approx(0.89)
+
+
+def test_search_floor_delta_relative_to_fp_score():
+    """floor_delta + fp_score: 'within delta of the fp reference' — a
+    tighter floor than the int8 base when fp scores higher."""
+    cost = {0: 0.0, 1: 0.01, 2: 0.2, 3: 0.0}
+
+    def score(pol):
+        return 0.9 - sum(cost[l] for l in (pol.int4_layers or ()))
+
+    res = search_mixed_precision(4, score, floor_delta=0.05, fp_score=0.95)
+    assert res.floor == pytest.approx(0.90)
+    assert sorted(res.policy.int4_layers) == [0, 3]   # only free layers fit
+    assert res.accuracy == pytest.approx(0.9)
+    assert "floor 0.9000" in res.describe()
+
+
+def test_search_floor_arguments_validated():
+    score = lambda pol: 0.9                            # noqa: E731
+    with pytest.raises(ValueError, match="exactly one"):
+        search_mixed_precision(2, score)
+    with pytest.raises(ValueError, match="exactly one"):
+        search_mixed_precision(2, score, accuracy_floor=0.8,
+                               floor_delta=0.1)
+    with pytest.raises(ValueError, match="fp_score"):
+        search_mixed_precision(2, score, accuracy_floor=0.8, fp_score=0.9)

@@ -112,6 +112,12 @@ def check_goodput(current: dict, baseline: dict) -> list[str]:
               f"{cur['summary'].get('n_rejected')}"
               + (f" (baseline goodput {bg} — scheduling behavior drifted; "
                  "re-record if intentional)" if drift else ""))
+        # multi-tenant scenarios: per-tenant goodput so the fair-share
+        # split stays visible in the CI log (DESIGN.md §14)
+        for tenant, ts in sorted(
+                (cur["summary"].get("by_tenant") or {}).items()):
+            print(f"    tenant {tenant}: goodput {ts.get('goodput')} "
+                  f"({ts.get('n_good')}/{ts.get('n_counted')} good)")
     return failures
 
 
