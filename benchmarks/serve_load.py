@@ -44,7 +44,9 @@ from repro.serving import (SLO, GenerationRequest, MultiTenantEngine,
                            ServingEngine, VirtualClock, VirtualCost,
                            Workload, bootstrap_summary, make_arrivals,
                            run_load, run_trials)
+from repro.kernels.kv_pack import kv_row_bytes
 from repro.serving.loadgen import load_trace
+from repro.serving.prefix_cache import PREFIX_BLOCK
 
 #: SLO / load calibration multipliers over the measured warmup step cost.
 #: Generous on purpose: a healthy run clears them with ~10x headroom, so the
@@ -255,6 +257,91 @@ def run_virtual_encoder(quick: bool) -> dict:
     return out
 
 
+def run_paged_capacity(quick: bool) -> dict:
+    """Virtual-clock paged-vs-dense capacity scenario (DESIGN.md §15).
+
+    ONE KV byte budget, two layouts: the dense engine preallocates
+    ``slots * max_len`` rows, so the budget caps it at 4 slots; the paged
+    engine spends the SAME bytes as 8-token blocks allocated per request's
+    worst case, so short requests (1 block each) pack many more concurrent
+    streams under the identical budget. The scenario bursts short prompts
+    at t=0 into both engines, tracks peak concurrency, and checks:
+
+    * goodput 1.0 — every request completes on both layouts;
+    * ``capacity_ratio`` = paged/dense peak concurrency (CI gates >= 2x);
+    * ``streams_match`` — per-request token streams byte-identical across
+      layouts (the §15 bit-identity claim, under load).
+
+    Deterministic like the rest of the virtual section: fixed seeds, fixed
+    burst, VirtualClock timing — two runs produce identical JSON."""
+    n = 12 if quick else 24
+    dense_slots, paged_slots, max_len = 4, 16, 64
+    cfg = reduced(get_config("stablelm-3b")).replace(act="gelu")
+    pol = QuantPolicy(num_layers=cfg.num_layers, mode="int",
+                      last_k_int4=cfg.num_layers)
+    params = None
+    # the ONE budget: exactly what dense preallocates for 4 slots at kv4
+    block_bytes = (PREFIX_BLOCK * cfg.num_layers
+                   * kv_row_bytes(cfg.num_kv_heads, cfg.hd, 4, fp_bytes=4))
+    budget = dense_slots * (max_len // PREFIX_BLOCK) * block_bytes
+
+    rng = np.random.default_rng(42)
+    prompts = [rng.integers(1, cfg.vocab_size,
+                            int(rng.integers(3, 7))).tolist()
+               for _ in range(n)]
+
+    def burst(paging, slots, kv_budget):
+        nonlocal params
+        plan = ExecutionPlan.build(cfg, pol, backend="reference", kv_bits=4,
+                                   kv_paging=paging)
+        if params is None:
+            params = deploy(api.init_model(cfg, jax.random.PRNGKey(0)),
+                            plan).params
+        kw = {"kv_budget_bytes": kv_budget} if paging == "paged" else {}
+        eng = ServingEngine(params, plan, slots=slots, max_len=max_len,
+                            clock=VirtualClock(), **kw)
+        # 4 new tokens => requests hold their slot across several pump
+        # steps, so post-step concurrency sampling sees the true packing
+        streams = [eng.submit(GenerationRequest(prompt=p, max_new_tokens=4))
+                   for p in prompts]
+        peak = 0
+        for _ in range(10_000):
+            eng.engine_step()
+            peak = max(peak, sum(1 for r in eng.active if r is not None))
+            if not (eng.queue or any(r is not None for r in eng.active)):
+                break
+        done = eng.pop_done()
+        toks = [tuple(s.result().tokens) for s in streams]
+        good = sum(r.finish_reason == "length" for r in done)
+        cell = {"slots": slots, "peak_concurrent": peak,
+                "goodput": {"mean": good / n}, "n_requests": n}
+        if paging == "paged":
+            st = eng.pool.stats()
+            cell["kv"] = {k: st[k] for k in
+                          ("blocks_total", "block_bytes", "budget_bytes",
+                           "cow_forks", "evictions")}
+        return cell, toks
+
+    dense_cell, dense_toks = burst("dense", dense_slots, None)
+    paged_cell, paged_toks = burst("paged", paged_slots, budget)
+    ratio = paged_cell["peak_concurrent"] / max(dense_cell["peak_concurrent"],
+                                                1)
+    out = {
+        "budget_bytes": budget,
+        "dense": dense_cell,
+        "paged": paged_cell,
+        "capacity_ratio": ratio,
+        "streams_match": dense_toks == paged_toks,
+    }
+    print(f"[virtual] paged_capacity: {paged_cell['peak_concurrent']} vs "
+          f"{dense_cell['peak_concurrent']} concurrent under "
+          f"{budget >> 10}KiB ({ratio:.1f}x), goodput "
+          f"{paged_cell['goodput']['mean']:.2f}/"
+          f"{dense_cell['goodput']['mean']:.2f}, "
+          f"streams_match={out['streams_match']}")
+    return out
+
+
 def run_virtual(quick: bool) -> dict:
     """Virtual-clock section: deterministic goodput/shed/reject numbers.
 
@@ -301,6 +388,7 @@ def main(quick: bool = False, trials: int | None = None,
     wall = run_wall(quick, trials, trace)
     virtual = run_virtual(quick)
     virtual.update(run_virtual_encoder(quick))
+    virtual["paged_capacity"] = run_paged_capacity(quick)
     if out:
         payload = {
             "bench": "serve_load",

@@ -24,7 +24,7 @@ from typing import Callable, Sequence
 
 from .policy import QuantPolicy
 
-__all__ = ["SearchResult", "search_mixed_precision"]
+__all__ = ["SearchResult", "load_search_policy", "search_mixed_precision"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,3 +109,42 @@ def search_mixed_precision(num_layers: int,
     return SearchResult(policy=mk(chosen), accuracy=best,
                         base_accuracy=base, sensitivity=ranking,
                         trajectory=tuple(trajectory), floor=floor)
+
+
+def load_search_policy(path: str, num_layers: int) -> QuantPolicy:
+    """Reconstruct a deployable ``QuantPolicy`` from a search artifact JSON.
+
+    Accepts either form the toolchain writes:
+
+    * a quality-bench payload (``benchmarks/table1_glue.py --search``) —
+      the search result lives under a ``"search"`` key whose
+      ``chosen_int4_layers`` is the winning assignment;
+    * a bare ``dataclasses.asdict(QuantPolicy)`` dump (the DeployedModel
+      artifact meta shape), loaded via ``QuantPolicy.from_dict``.
+
+    ``num_layers`` pins the policy to the model actually being served —
+    the bench may have searched a reduced config, and a chosen layer index
+    outside ``[0, num_layers)`` is a config mismatch, not a policy."""
+    import json
+
+    with open(path) as f:
+        payload = json.load(f)
+    if not isinstance(payload, dict):
+        raise ValueError(f"{path}: expected a JSON object, "
+                         f"got {type(payload).__name__}")
+    search = payload.get("search", payload)
+    if "chosen_int4_layers" in search:
+        chosen = tuple(sorted(int(l) for l in search["chosen_int4_layers"]))
+        bad = [l for l in chosen if not 0 <= l < num_layers]
+        if bad:
+            raise ValueError(
+                f"{path}: chosen_int4_layers {bad} outside the served "
+                f"model's [0, {num_layers}) layer range")
+        return QuantPolicy(num_layers=num_layers, mode="int",
+                           int4_layers=chosen)
+    pol = QuantPolicy.from_dict(dict(search))
+    if pol.num_layers != num_layers:
+        raise ValueError(
+            f"{path}: policy num_layers={pol.num_layers} does not match "
+            f"the served model's {num_layers}")
+    return pol

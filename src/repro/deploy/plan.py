@@ -135,6 +135,12 @@ class ExecutionPlan:
     #: prefill-only mode serving EncodeRequests (classify/embed/score)
     #: through one batched bidirectional forward, no KV retention.
     mode: str = "decode"
+    #: KV memory layout (DESIGN.md §15): 'dense' preallocates slots×max_len
+    #: rows per slot (the original layout; artifacts written before this
+    #: knob existed load as it); 'paged' routes the cache through the
+    #: refcounted block pool — block tables, prefix sharing by reference,
+    #: copy-on-write forks, one byte budget for admission AND eviction.
+    kv_paging: str = "dense"
 
     # ------------------------------------------------------------- build
     @classmethod
@@ -145,7 +151,8 @@ class ExecutionPlan:
               sampling=None, prefix_cache: int = 0,
               prefill_batch: int = 1,
               act_bits: Optional[int] = None,
-              mode: str = "decode") -> "ExecutionPlan":
+              mode: str = "decode",
+              kv_paging: str = "dense") -> "ExecutionPlan":
         """Resolve + validate a plan.
 
         backend       'pallas' routes int matmuls (and quantized-KV decode
@@ -182,6 +189,15 @@ class ExecutionPlan:
                       forward, no KV retention, so kv_bits must stay 16 and
                       the prefix cache must be off. Needs a family with a
                       bidirectional encode path (bert).
+        kv_paging     'dense' (default; old artifacts load as it) keeps the
+                      preallocated slots×max_len layout; 'paged' allocates
+                      KV in PREFIX_BLOCK-token blocks from one refcounted,
+                      byte-budgeted pool (DESIGN.md §15) — prefix hits
+                      attach blocks by reference, n>1 samples fork
+                      copy-on-write, admission is gated on worst-case block
+                      need. Needs the chunked slot-cache prefill path and
+                      mode='decode'. Token streams are bit-identical to
+                      'dense'.
         """
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, "
@@ -262,6 +278,20 @@ class ExecutionPlan:
                     "mode='encoder' runs the batched bucketed forward; "
                     "prefill_mode='token' (seed semantics) does not apply")
 
+        if kv_paging not in ("dense", "paged"):
+            raise ValueError(f"kv_paging must be 'dense' or 'paged', "
+                             f"got {kv_paging!r}")
+        if kv_paging == "paged":
+            if mode != "decode":
+                raise ValueError(
+                    "kv_paging='paged' pages the decode KV cache; "
+                    f"mode={mode!r} retains none")
+            if prefill_mode != "chunked":
+                raise ValueError(
+                    "kv_paging='paged' needs the chunked slot-cache prefill "
+                    f"path; prefill_mode={prefill_mode!r} has no KV rows "
+                    "to page")
+
         use_pallas = backend == "pallas"
         if fuse_epilogue is None:
             fuse_epilogue = use_pallas
@@ -275,7 +305,8 @@ class ExecutionPlan:
                    prefill_mode=prefill_mode, decode_dtype=decode_dtype,
                    fuse_epilogue=fuse_epilogue, segments=tuple(segments),
                    default_sampling=sampling, prefix_cache=prefix_cache,
-                   prefill_batch=prefill_batch, act_bits=act_bits, mode=mode)
+                   prefill_batch=prefill_batch, act_bits=act_bits, mode=mode,
+                   kv_paging=kv_paging)
 
     # ------------------------------------------------------------ queries
     @property
@@ -318,13 +349,15 @@ class ExecutionPlan:
                 "prefix_cache": self.prefix_cache,
                 "prefill_batch": self.prefill_batch,
                 "act_bits": self.act_bits,
-                "mode": self.mode}
+                "mode": self.mode,
+                "kv_paging": self.kv_paging}
 
     def describe(self) -> str:
         segs = ", ".join(f"[{s}:{e}) w{sp.w_bits or 'fp'}/a{sp.a_bits or 'fp'}"
                          for s, e, sp in self.segments)
         mode = "" if self.mode == "decode" else f"mode={self.mode}, "
-        return (f"ExecutionPlan({self.cfg.name}, {mode}"
+        paging = "" if self.kv_paging == "dense" else "kv_paging=paged, "
+        return (f"ExecutionPlan({self.cfg.name}, {mode}{paging}"
                 f"backend={self.backend}, "
                 f"kv_bits={self.kv_bits}, prefill={self.prefill_mode}, "
                 f"dtype={self.decode_dtype}, segments=({segs}))")

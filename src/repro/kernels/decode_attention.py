@@ -118,3 +118,51 @@ def decode_attention_pallas(q: jax.Array, k_q: jax.Array, v_q: jax.Array,
         interpret=interpret,
     )(qg, k_q, v_q, k_scale, v_scale, k_new, v_new, lens)
     return out.reshape(B, H, dh)
+
+
+# ------------------------------------------------------- paged indirection
+def gather_kv_blocks(buf: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """Block-pool buffer (NB, block, ...) + per-slot tables (B, nb) ->
+    dense-layout view (B, nb*block, ...).
+
+    ``mode='clip'`` clamps out-of-range table entries (the pool pads
+    tables with its ``num_blocks`` sentinel) — jnp.take's default fill
+    mode would inject NaN, which survives even fully-masked positions as
+    ``0 * NaN``. Clamped positions surface arbitrary resident rows — safe
+    by the same argument that makes the dense layout's stale rows safe:
+    every position >= the slot's length is replaced with ``NEG_INF``
+    before the softmax (``_kernel`` above and the jnp reference path
+    alike), so garbage rows contribute *exact zeros* to the output,
+    keeping paged bit-identical to dense."""
+    g = jnp.take(buf, block_tables, axis=0,
+                 mode="clip")                      # (B, nb, block, ...)
+    return g.reshape(g.shape[0], g.shape[1] * g.shape[2], *g.shape[3:])
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
+def decode_attention_paged(q: jax.Array, k_q_blocks: jax.Array,
+                           v_q_blocks: jax.Array, k_scale_blocks: jax.Array,
+                           v_scale_blocks: jax.Array,
+                           block_tables: jax.Array, k_new: jax.Array,
+                           v_new: jax.Array, lengths: jax.Array, *,
+                           bs: int = DEFAULT_BS,
+                           interpret: bool = False) -> jax.Array:
+    """Paged-layout entry point: one per-layer gather of block indices,
+    then the UNCHANGED in-VMEM dequant online-softmax loop.
+
+    ``*_blocks`` are block-pool buffers for ONE layer, (NB, block, Hkv, ...)
+    — the pool's layer-major (L, NB, ...) arrays indexed at a layer.
+    ``block_tables`` is (B, nb) int32 with nb*block == the dense S (a
+    multiple of ``bs`` after the engine's bucket rounding). Output is
+    bit-identical to ``decode_attention_pallas`` on the dense layout the
+    tables describe. The jnp reference path gets the same indirection one
+    level up: the engine gathers a dense-shaped cache view per step (see
+    ``serving/block_pool.py``) and feeds the existing reference attention.
+    """
+    k_q = gather_kv_blocks(k_q_blocks, block_tables)
+    v_q = gather_kv_blocks(v_q_blocks, block_tables)
+    k_scale = gather_kv_blocks(k_scale_blocks, block_tables)
+    v_scale = gather_kv_blocks(v_scale_blocks, block_tables)
+    return decode_attention_pallas(q, k_q, v_q, k_scale, v_scale,
+                                   k_new, v_new, lengths, bs=bs,
+                                   interpret=interpret)

@@ -22,8 +22,12 @@ Entry modes:
 
 Generation flags map onto the §10 API: ``--temperature/--top-k/--top-p/
 --seed`` build the burst's ``SamplingParams`` (temperature 0 = greedy),
+``--n`` fans each prompt into n independently-seeded sample streams,
 ``--stop`` sets stop-token ids, and ``--stream`` prints each token as the
-engine emits it (the TokenStream callback form).
+engine emits it (the TokenStream callback form). ``--kv-paging paged``
+(+ optional ``--kv-budget-mb``) serves the burst out of the §15 paged
+block pool; ``--policy-from search.json`` deploys the exact per-layer bit
+assignment a §13 auto-search run chose.
 
 The engine itself lives in ``repro.serving``; plans/artifacts in
 ``repro.deploy``. ``Request`` and ``ServingEngine`` stay importable from
@@ -81,15 +85,21 @@ def _build_model(args):
     if args.reduced:
         cfg = reduced(cfg)
     n_units = cfg.dec_layers if cfg.family == "encdec" else cfg.num_layers
-    k4 = args.int4_last_k if args.int4_last_k >= 0 else n_units // 2
-    policy = QuantPolicy(num_layers=n_units, mode="int", last_k_int4=k4)
+    if args.policy_from:
+        from ..core.autosearch import load_search_policy
+        policy = load_search_policy(args.policy_from, n_units)
+        print(f"[serve] policy from {args.policy_from}: {policy.describe()}")
+    else:
+        k4 = args.int4_last_k if args.int4_last_k >= 0 else n_units // 2
+        policy = QuantPolicy(num_layers=n_units, mode="int", last_k_int4=k4)
     plan = ExecutionPlan.build(cfg, policy, backend=args.backend,
                                kv_bits=args.kv_bits,
                                prefill_mode=args.prefill_mode,
                                prefix_cache=int(args.prefix_cache_mb
                                                 * (1 << 20)),
                                prefill_batch=args.prefill_batch,
-                               act_bits=args.act_bits)
+                               act_bits=args.act_bits,
+                               kv_paging=args.kv_paging)
     params = api.init_model(cfg, jax.random.PRNGKey(0))
     return deploy(params, plan)
 
@@ -138,6 +148,30 @@ def main(argv=None):
                         "§11): cached quantized prefix rows scatter into "
                         "new slots and only the prompt suffix prefills; "
                         "0 disables")
+    p.add_argument("--kv-paging", default="dense",
+                   choices=["dense", "paged"],
+                   help="KV-cache memory layout (DESIGN.md §15): 'paged' "
+                        "serves slots, shared prefixes and copy-on-write "
+                        "forks out of one refcounted block pool under one "
+                        "byte budget (admission + LRU eviction), with "
+                        "token streams bit-identical to 'dense'")
+    p.add_argument("--kv-budget-mb", type=float, default=None,
+                   help="paged KV pool byte budget in MiB (requires "
+                        "--kv-paging paged); default sizes the pool to "
+                        "exactly the dense slots*max_len capacity, so "
+                        "flipping --kv-paging alone never changes capacity")
+    p.add_argument("--policy-from", default=None, metavar="JSON",
+                   help="load the mixed-precision QuantPolicy from a "
+                        "search artifact (benchmarks/table1_glue.py "
+                        "--search output, or a bare policy dump) instead "
+                        "of the --int4-last-k heuristic — serve exactly "
+                        "the per-layer bit assignment the auto-search "
+                        "chose (DESIGN.md §13)")
+    p.add_argument("--n", type=int, default=1,
+                   help="samples per burst prompt: n > 1 fans each request "
+                        "into n independent streams (seeded per sample "
+                        "index); a paged engine shares the prompt's KV "
+                        "blocks copy-on-write across the samples")
     p.add_argument("--act-bits", type=int, default=None,
                    choices=[0, 4, 8],
                    help="activation precision override (DESIGN.md §13): "
@@ -183,6 +217,16 @@ def main(argv=None):
     if args.artifact and args.export:
         p.error("--export builds a fresh model and cannot be combined with "
                 "--artifact (which serves an existing one)")
+    if args.artifact and args.kv_paging == "paged":
+        p.error("--artifact serves the artifact's own plan (including its "
+                "kv_paging axis); export the model with --kv-paging paged "
+                "instead of overriding it at load time")
+    if args.kv_budget_mb is not None and not args.artifact \
+            and args.kv_paging != "paged":
+        p.error("--kv-budget-mb sizes the paged KV pool; it needs "
+                "--kv-paging paged (or a paged artifact)")
+    if args.n < 1:
+        p.error(f"--n must be >= 1, got {args.n}")
     if args.tenant:
         if args.artifact or args.export:
             p.error("--tenant hosts saved artifacts; it cannot be combined "
@@ -211,13 +255,15 @@ def main(argv=None):
                 f"mode={model.plan.mode!r}")
 
     cfg = model.plan.cfg
+    kv_budget = (int(args.kv_budget_mb * (1 << 20))
+                 if args.kv_budget_mb is not None else None)
     eng = ServingEngine(model, slots=args.slots, max_len=args.max_len,
-                        max_queue=args.max_queue)
+                        max_queue=args.max_queue, kv_budget_bytes=kv_budget)
     if model.plan.mode == "encoder":
         return _serve_encoder_burst(args, eng, cfg)
     sampling = SamplingParams(temperature=args.temperature,
                               top_k=args.top_k, top_p=args.top_p,
-                              seed=args.seed)
+                              seed=args.seed, n=args.n)
     stop = (frozenset(int(t) for t in args.stop.split(","))
             if args.stop else frozenset())
     on_token = ((lambda rid, tok: print(f"[stream] rid={rid} tok={tok}"))

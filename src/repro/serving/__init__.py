@@ -13,6 +13,12 @@ The deployment side of the paper, grown into a real package:
   optional int8/int4 quantization with per-(token, head) scales — DESIGN.md §8)
 * ``prefix_cache`` — refcounted, LRU-evicted, byte-budgeted store of
   quantized KV prefix blocks for shared-prefix reuse (DESIGN.md §11)
+* ``block_pool``  — paged KV memory subsystem (DESIGN.md §15):
+  ``BlockPool`` (refcounted block-table allocator over quantized KV blocks,
+  one byte budget for admission AND LRU eviction, prefix registry shared by
+  reference, copy-on-write forks) + ``PagedKVCache`` (the engine-facing
+  slot view); ``plan.kv_paging='paged'`` switches the engine onto it with
+  bit-identical token streams
 * ``engine``     — prefill/decode-separated step loop over the deployed
   model (batched bucketed prefill, prefix reuse); ``engine_step()`` is the
   public pump, ``cancel(rid)`` frees a slot and its KV state mid-flight
@@ -43,7 +49,9 @@ default sampling all come from the plan (DESIGN.md §9).
 shim over ``GenerationRequest``.
 """
 from .api import (FINISH_REASONS, GenerationRequest, GenerationResult,
-                  QueueFullError, Request, SamplingParams, TokenStream)
+                  QueueFullError, Request, SamplingParams, TokenStream,
+                  sample_seed)
+from .block_pool import BlockPool, PagedKVCache, blocks_needed
 from .clock import SYSTEM_CLOCK, Clock, VirtualClock
 from .encoder import (ENCODE_TASKS, EncodeHandle, EncodeRequest,
                       EncodeResult)
@@ -57,12 +65,13 @@ from .prefix_cache import PrefixCache
 from .scheduler import Scheduler
 from .tenants import MultiTenantEngine, QuotaExceededError, TenantState
 
-__all__ = ["Arrival", "Clock", "ENCODE_TASKS", "EncodeHandle",
+__all__ = ["Arrival", "BlockPool", "Clock", "ENCODE_TASKS", "EncodeHandle",
            "EncodeRequest", "EncodeResult", "FINISH_REASONS",
            "GenerationRequest", "GenerationResult", "LoadResult",
-           "MultiTenantEngine", "PrefixCache", "QueueFullError",
-           "QuotaExceededError", "Request", "SLO", "SYSTEM_CLOCK",
-           "SamplingParams", "Scheduler", "ServeMetrics", "ServingEngine",
-           "SlotKVCache", "TenantState", "TokenStream", "VirtualClock",
-           "VirtualCost", "Workload", "bootstrap_summary", "make_arrivals",
-           "run_load", "run_trials", "trace_arrivals"]
+           "MultiTenantEngine", "PagedKVCache", "PrefixCache",
+           "QueueFullError", "QuotaExceededError", "Request", "SLO",
+           "SYSTEM_CLOCK", "SamplingParams", "Scheduler", "ServeMetrics",
+           "ServingEngine", "SlotKVCache", "TenantState", "TokenStream",
+           "VirtualClock", "VirtualCost", "Workload", "blocks_needed",
+           "bootstrap_summary", "make_arrivals", "run_load", "run_trials",
+           "sample_seed", "trace_arrivals"]

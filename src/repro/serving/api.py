@@ -34,7 +34,7 @@ import numpy as np
 
 __all__ = ["SamplingParams", "GenerationRequest", "GenerationResult",
            "TokenStream", "Request", "QueueFullError", "FINISH_REASONS",
-           "sample_token", "sample_batch"]
+           "sample_token", "sample_batch", "sample_seed"]
 
 #: Terminal states of a request: hit ``max_new_tokens`` / emitted a stop
 #: token / cancelled via ``cancel(rid)`` / shed at admission past deadline.
@@ -59,12 +59,23 @@ class SamplingParams:
                  (1.0 disables).
     seed         PRNG seed; a request's stream is a pure function of
                  (prompt, seed) regardless of batch composition.
+    n            number of independent samples to draw from ONE prompt.
+                 ``submit`` fans an ``n > 1`` request into ``n`` children
+                 (one stream each); sample ``i`` decodes with seed
+                 ``sample_seed(seed, i)``, so every sample's stream is a
+                 pure function of (prompt, seed, sample_index). Sample 0
+                 keeps the request's own seed — identical to ``n=1``. On a
+                 paged-KV engine the samples share the prompt's blocks
+                 copy-on-write; dense engines serve the same streams by
+                 plain expansion. Greedy (temperature=0) samples are all
+                 identical by construction.
     """
 
     temperature: float = 0.0
     top_k: int = 0
     top_p: float = 1.0
     seed: int = 0
+    n: int = 1
 
     def __post_init__(self):
         if self.temperature < 0:
@@ -75,6 +86,8 @@ class SamplingParams:
                              f"got {self.top_k}")
         if not 0.0 < self.top_p <= 1.0:
             raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if self.n < 1:
+            raise ValueError(f"n must be >= 1, got {self.n}")
 
     @property
     def greedy(self) -> bool:
@@ -92,6 +105,17 @@ class SamplingParams:
             return cls(**value)
         raise TypeError(f"sampling must be SamplingParams, dict or None, "
                         f"got {type(value).__name__}")
+
+
+def sample_seed(seed: int, index: int) -> int:
+    """Per-sample decode seed for ``SamplingParams.n`` fanout: sample 0
+    keeps the request's seed (its stream IS the n=1 stream); sample i > 0
+    derives a distinct seed by a golden-ratio stride, kept positive for
+    ``PRNGKey``. Pure arithmetic — the same (prompt, seed, i) always decodes
+    the same stream on any engine layout."""
+    if index == 0:
+        return seed
+    return (seed + 0x9E3779B9 * index) & 0x7FFFFFFF
 
 
 # ----------------------------------------------------------------- requests
@@ -124,6 +148,11 @@ class GenerationRequest:
     admit_t: Optional[float] = dataclasses.field(default=None, repr=False)
     first_token_t: Optional[float] = dataclasses.field(default=None,
                                                        repr=False)
+    # n>1 fanout bookkeeping (set by submit): children of one n>1 request
+    # share a fork_group id — a paged engine prefilling several members of
+    # one group in the same batch shares the prompt blocks copy-on-write.
+    fork_group: Optional[int] = dataclasses.field(default=None, repr=False)
+    sample_index: int = dataclasses.field(default=0, repr=False)
 
     def __post_init__(self):
         self.stop_tokens = frozenset(int(t) for t in self.stop_tokens)

@@ -1,6 +1,10 @@
 """Serving engine: prefill/decode-separated step loop (DESIGN.md §7) behind
 the streaming generation API (DESIGN.md §10), with shared-prefix KV reuse,
-batched bucketed prefill (DESIGN.md §11), and prefill-only encode traffic
+batched bucketed prefill (DESIGN.md §11), an optional paged KV layout —
+``plan.kv_paging='paged'`` routes the slot cache through the refcounted
+block pool of ``serving/block_pool.py``: byte-budgeted admission, prefix
+blocks attached by reference, copy-on-write ``n>1`` forks, bit-identical
+streams (DESIGN.md §15) — and prefill-only encode traffic
 (DESIGN.md §14) — classify/embed/score requests that resolve in the step
 that admits them, either on a mode='encoder' plan (bidirectional int4 BERT,
 per-row length masking keeps bucket padding bit-exact) or interleaved with
@@ -45,6 +49,7 @@ silently clamping KV writes past max_len).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, Optional
 
 import jax
@@ -52,16 +57,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..deploy import DeployedModel, ExecutionPlan
-from ..kernels.kv_pack import kv_buffer_keys
+from ..kernels.kv_pack import kv_buffer_keys, kv_row_bytes
 from ..models import api as model_api
 from ..models.bert import bert_encode, bert_pool
 from .api import (GenerationRequest, SamplingParams, TokenStream,
-                  sample_batch, sample_token)
+                  sample_batch, sample_seed, sample_token)
+from .block_pool import BlockPool, PagedKVCache, blocks_needed
 from .clock import SYSTEM_CLOCK, Clock
 from .encoder import EncodeHandle, EncodeRequest
 from .kv_cache import SlotKVCache
 from .metrics import ServeMetrics
-from .prefix_cache import PrefixCache
+from .prefix_cache import PREFIX_BLOCK, PrefixCache
 from .scheduler import Request, Scheduler, group_admits  # noqa: F401 (compat)
 
 
@@ -89,7 +95,8 @@ class ServingEngine:
                  max_queue: Optional[int] = None,
                  metrics: Optional[ServeMetrics] = None,
                  clock: Clock = SYSTEM_CLOCK,
-                 tenant: Optional[str] = None):
+                 tenant: Optional[str] = None,
+                 kv_budget_bytes: Optional[int] = None):
         if isinstance(model, DeployedModel):
             if plan is not None and plan != model.plan:
                 raise ValueError(
@@ -142,18 +149,51 @@ class ServingEngine:
         self.prefix_cache: Optional[PrefixCache] = None
         self._prefix_refs: dict[int, tuple] = {}   # rid -> pinned block keys
         self._encode_fns: dict[tuple, callable] = {}
+        # paged KV layout (DESIGN.md §15): plan.kv_paging='paged' routes the
+        # slot cache through the refcounted block pool
+        self.paged = plan.kv_paging == "paged"
+        self.pool: Optional[BlockPool] = None
+        self._prefix_on = False    # paged-mode prefix registry switch
+        self._reserved = 0         # blocks reserved within one admit round
+        self._next_fork = 0        # fork-group ids for n>1 fanout
+        if kv_budget_bytes is not None and not self.paged:
+            raise ValueError(
+                "kv_budget_bytes applies to kv_paging='paged' plans only "
+                "(the dense layout preallocates slots*max_len rows)")
         if self.mode == "encoder":
             # prefill-only: no KV retained across steps, no decode state —
             # every request resolves inside the step that admits it.
             self.kv = None
             self.state = None
         elif self.prefill_mode == "chunked":
-            self.kv = SlotKVCache.from_plan(plan, slots, max_len)
             self.state = None
             self._prefill_fns: dict[tuple, callable] = {}
             self._chunk_fns: dict[tuple, callable] = {}
-            if plan.prefix_cache:
-                self.prefix_cache = PrefixCache(plan.prefix_cache)
+            if self.paged:
+                if max_len % PREFIX_BLOCK:
+                    raise ValueError(
+                        f"kv_paging='paged' needs max_len % {PREFIX_BLOCK} "
+                        f"== 0 (block granularity), got {max_len}")
+                block_bytes = PREFIX_BLOCK * cfg.num_layers * kv_row_bytes(
+                    cfg.num_kv_heads, cfg.hd, self.kv_bits,
+                    fp_bytes=jnp.dtype(self.dtype).itemsize)
+                if kv_budget_bytes is None:
+                    # dense-equivalent default: exactly the bytes the dense
+                    # layout would preallocate, so flipping kv_paging alone
+                    # changes the layout, never the capacity
+                    kv_budget_bytes = (slots * (max_len // PREFIX_BLOCK)
+                                       * block_bytes)
+                self.pool = BlockPool(cfg, kv_budget_bytes, dtype=self.dtype,
+                                      kv_bits=self.kv_bits)
+                self.kv = PagedKVCache(self.pool, slots, max_len)
+                # plan.prefix_cache > 0 switches prefix reuse on; the BYTE
+                # value is absorbed by the pool budget (the registry shares
+                # the pool's blocks instead of owning a second store)
+                self._prefix_on = plan.prefix_cache > 0
+            else:
+                self.kv = SlotKVCache.from_plan(plan, slots, max_len)
+                if plan.prefix_cache:
+                    self.prefix_cache = PrefixCache(plan.prefix_cache)
         else:
             self.kv = None
             self.state = plan.decode_state(slots, max_len)
@@ -178,7 +218,15 @@ class ServingEngine:
         (iterate it, or pass ``on_token`` for the callback form). Malformed
         requests are rejected HERE, for both prefill modes — by decode time
         the bad prompt would have been scattered into the cache (or indexed
-        at [-1]) already."""
+        at [-1]) already.
+
+        ``sampling.n > 1`` fans out into ``n`` independent child requests
+        (sample ``i`` decodes with seed ``api.sample_seed(seed, i)``) and
+        returns a LIST of ``n`` streams instead of one. On a paged engine
+        the children share the prompt's KV blocks copy-on-write; on a dense
+        engine they expand into plain slots — the streams are identical
+        either way. A ``QueueFullError`` mid-fanout propagates; children
+        already enqueued stay queued (cancel them by rid if unwanted)."""
         if self.mode == "encoder":
             raise ValueError(
                 "this engine serves a mode='encoder' plan: no decode loop "
@@ -199,9 +247,31 @@ class ServingEngine:
                 f"request {req.rid}: prompt ({plen}) + max_new_tokens "
                 f"({req.max_new_tokens}) exceeds engine max_len "
                 f"({self.max_len})")
+        if self.paged:
+            need = blocks_needed(plen, req.max_new_tokens)
+            if need > self.pool.num_blocks:
+                raise ValueError(
+                    f"request {req.rid}: needs {need} KV blocks but the "
+                    f"pool budget holds {self.pool.num_blocks} total — "
+                    "raise kv_budget_bytes or shrink the request")
         req.sampling = SamplingParams.resolve(
             req.sampling if req.sampling is not None
             else self.default_sampling)
+        sp = req.sampling
+        if sp.n > 1:
+            gid = self._next_fork
+            self._next_fork += 1
+            streams = []
+            for i in range(sp.n):
+                child = dataclasses.replace(
+                    req,
+                    sampling=dataclasses.replace(
+                        sp, n=1, seed=sample_seed(sp.seed, i)),
+                    rid=-1, out=None, finish_reason=None)
+                child.fork_group = gid
+                child.sample_index = i
+                streams.append(self.submit(child, on_token=on_token))
+            return streams
         stream = TokenStream(self, req, on_token=on_token)
         self._streams[req.rid] = stream
         try:
@@ -322,6 +392,8 @@ class ServingEngine:
             self._token_step()
         for req in self.scheduler.pop_shed():
             self._finalize_unslotted(req, "shed")
+        if self.paged:
+            self.metrics.update_kv(self.pool.stats())
         return self._events
 
     # ------------------------------------------------------------ lifecycle
@@ -389,6 +461,10 @@ class ServingEngine:
         if not isinstance(req, EncodeRequest):
             req.out = np.array(self.generated[slot][:req.max_new_tokens],
                                np.int32)
+        if self.paged:
+            # drop every block reference the request holds (shared blocks
+            # survive under their other holders / the prefix registry)
+            self.kv.release_slot(slot)
         req.finish_reason = reason
         req.finish_t = self.clock()
         self.scheduler.complete(slot)
@@ -466,19 +542,32 @@ class ServingEngine:
             plen = len(req.prompt)
             bucket = _bucket_for(plen, self.max_len)
             m, keys = 0, ()
-            if self.prefix_cache is not None:
+            if self.paged:
+                self.kv.open_slot(s, req.rid)
+                if self._prefix_on:
+                    # registry hit: attach resident blocks BY REFERENCE —
+                    # refcount++ pins them, no row copy ever happens
+                    m, ids = self.pool.match(req.prompt)
+                    if m:
+                        self.pool.attach(req.rid, ids)
+                        self.kv.extend_table(s, ids)
+                    keys = tuple(ids)
+                    self.metrics.record_prefix(m, plen)
+            elif self.prefix_cache is not None:
                 m, keys = self.prefix_cache.match(req.prompt)
                 self._prefix_refs[req.rid] = keys
                 self.metrics.record_prefix(m, plen)
             jobs.append((s, req, bucket, m, keys))
         groups = group_admits(jobs, key_fn=lambda j: (j[2], j[3], j[4]),
                               max_batch=self.prefill_batch)
+        blocks_path = (self._prefix_on if self.paged
+                       else self.prefix_cache is not None)
         for (bucket, m, keys), members in groups:
             group = [(s, req) for s, req, *_ in members
                      if self.scheduler.active[s] is req]
             if not group:      # cancelled by a callback mid-round
                 continue
-            if self.prefix_cache is not None:
+            if blocks_path:
                 self._prefill_group_blocks(bucket, m, keys, group)
             else:
                 self._prefill_group(bucket, group)
@@ -496,12 +585,16 @@ class ServingEngine:
                                                      jnp.asarray(toks))
         firsts = []
         total = 0
+        fork_leaders: dict = {}
         for i, (s, req) in enumerate(group):
             plen = len(req.prompt)
             total += plen
             firsts.append(self._sample_first(logits[i, plen - 1], s))
-            self.kv.reset_slot(s)
-            self.kv.insert_prefill(s, pstate, plen, bucket, row=i)
+            if self.paged:
+                self._paged_insert_fp(s, req, pstate, i, fork_leaders)
+            else:
+                self.kv.reset_slot(s)
+                self.kv.insert_prefill(s, pstate, plen, bucket, row=i)
         self.metrics.record("prefill", self.clock() - t0, total,
                             tenant=self.tenant)
         self.last_step_tokens += total
@@ -511,8 +604,13 @@ class ServingEngine:
         """Prefix-reuse prefill (DESIGN.md §11): restore the ``m`` cached
         prefix tokens (codes + scales copy straight into the scratch cache,
         no requantization) and compute only the suffix, one prefix block per
-        forward so hit and cold runs attend bit-identical rows."""
-        B = self.prefix_cache.block
+        forward so hit and cold runs attend bit-identical rows.
+
+        Serves both layouts: dense restores host rows from the PrefixCache
+        store; paged gathers the resident pool blocks on device (same
+        values — the pool's blocks hold exactly the rows a dense publish
+        would have copied out)."""
+        B = self.pool.block if self.paged else self.prefix_cache.block
         n = _pow2_ceil(len(group))
         t0 = self.clock()
         # scratch capacity on the BLOCK grid: a bucket capped at a
@@ -524,10 +622,13 @@ class ServingEngine:
         S = -(-bucket // B) * B
         state = self.plan.decode_state(n, S)
         if m:
-            rows = self.prefix_cache.gather(keys)
+            if self.paged:
+                rows = self.pool.gather_rows(list(keys))
+            else:
+                rows = {key: jnp.asarray(val)
+                        for key, val in self.prefix_cache.gather(keys).items()}
             state = {key: (val if key == "len" else
-                           val.at[:, :, :m].set(jnp.asarray(rows[key])[:,
-                                                                       None]))
+                           val.at[:, :, :m].set(rows[key][:, None]))
                      for key, val in state.items()}
             state["len"] = jnp.asarray(m, jnp.int32)
         max_plen = max(len(req.prompt) for _, req in group)
@@ -547,13 +648,18 @@ class ServingEngine:
         firsts = []
         total = 0
         copy = min(S, self.max_len)     # slot rows past plen stay masked
+        fork_leaders: dict = {}
         for i, (s, req) in enumerate(group):
             plen = len(req.prompt)
             total += plen - m
             firsts.append(self._sample_first(first_logits[i], s))
-            self.kv.reset_slot(s)
-            self.kv.insert_rows(s, state, plen, copy, row=i)
-            self._publish_prefix(req, m, state, i)
+            if self.paged:
+                self._paged_insert_state(s, req, state, i, m, fork_leaders)
+                self._paged_publish(req)
+            else:
+                self.kv.reset_slot(s)
+                self.kv.insert_rows(s, state, plen, copy, row=i)
+                self._publish_prefix(req, m, state, i)
         self.metrics.record("prefill", self.clock() - t0, total,
                             tenant=self.tenant)
         self.last_step_tokens += total
@@ -577,6 +683,98 @@ class ServingEngine:
             return {key: host[key][:, lo:hi].copy() for key in buf_keys}
 
         self.prefix_cache.insert(req.prompt, upto, rows_for_block)
+
+    # --------------------------------------------------------------- paged
+    def _paged_fits(self, req) -> bool:
+        """Admission predicate (DESIGN.md §15): a request admits only if
+        its WORST-CASE block need — every prompt + generated token, whole
+        blocks — fits in free + evictable pool blocks, minus what this
+        round's earlier admissions already reserved. Prefix hits only ever
+        reduce the blocks actually allocated, so a reservation can never be
+        exceeded. Encode requests retain no KV and always fit."""
+        if isinstance(req, EncodeRequest):
+            return True
+        need = blocks_needed(len(req.prompt), req.max_new_tokens)
+        if self.pool.available() - self._reserved < need:
+            return False
+        self._reserved += need
+        return True
+
+    def _fork_share(self, slot: int, req, fork_leaders: dict, lo: int,
+                    nb_full: int) -> int:
+        """Copy-on-write fork bookkeeping for one prefill-group member.
+
+        The first member of a fork group in this prefill group is the
+        leader (recorded); later members attach the leader's FULL prompt
+        blocks ``[lo, nb_full)`` by reference and only write their own tail
+        block + decode blocks — prompt KV is stored once per group, decode
+        divergence stays private. (Fork members split across prefill groups
+        fall back to private blocks here; with the prefix registry on they
+        still converge to shared blocks via ``match`` on later arrivals.)
+        Returns the first block index this member must WRITE itself."""
+        if req.fork_group is None:
+            return lo
+        leader = fork_leaders.get(req.fork_group)
+        if leader is None or leader[1] != len(req.prompt):
+            fork_leaders[req.fork_group] = (slot, len(req.prompt))
+            return lo
+        share = self.kv.block_ids(leader[0])[lo:nb_full]
+        if not share:
+            return lo
+        self.pool.attach(req.rid, share)
+        self.kv.extend_table(slot, share)
+        self.pool.cow_forks += 1
+        return nb_full
+
+    def _paged_insert_fp(self, slot: int, req, pstate, row: int,
+                         fork_leaders: dict) -> None:
+        """Paged analogue of ``insert_prefill``: allocate the request's
+        worst-case block need up front (admission already reserved it) and
+        write the prompt blocks from the fp prefill row, quantize-on-insert
+        at kv_bits < 16. Decode blocks are allocated NOW, written later by
+        ``append_from`` — a request can never run out of KV mid-decode."""
+        B = self.pool.block
+        plen = len(req.prompt)
+        nb_full, nb_fill = plen // B, -(-plen // B)
+        start = self._fork_share(slot, req, fork_leaders, 0, nb_full)
+        own = self.pool.alloc(req.rid,
+                              blocks_needed(plen, req.max_new_tokens) - start)
+        self.kv.extend_table(slot, own)
+        write_n = nb_fill - start
+        if write_n:
+            self.kv.write_fp_blocks(own[:write_n], pstate, row, start,
+                                    write_n)
+        self.kv.set_length(slot, plen)
+
+    def _paged_insert_state(self, slot: int, req, state, row: int, m: int,
+                            fork_leaders: dict) -> None:
+        """Paged analogue of ``insert_rows`` (the prefix-chunked path):
+        blocks ``[0, m/B)`` are already attached by reference, so only the
+        computed-suffix blocks copy out of the plan-precision scratch —
+        same precision, no requantization."""
+        B = self.pool.block
+        plen = len(req.prompt)
+        nb_full, nb_fill = plen // B, -(-plen // B)
+        start = self._fork_share(slot, req, fork_leaders, m // B, nb_full)
+        own = self.pool.alloc(req.rid,
+                              blocks_needed(plen, req.max_new_tokens) - start)
+        self.kv.extend_table(slot, own)
+        write_n = nb_fill - start
+        if write_n:
+            self.kv.write_state_blocks(own[:write_n], state, row, start * B,
+                                       write_n)
+        self.kv.set_length(slot, plen)
+
+    def _paged_publish(self, req) -> None:
+        """Register the request's full prompt blocks in the pool's prefix
+        registry (pure bookkeeping — the blocks ARE the cache; no device→
+        host copy, the dense path's lazy-copy publish disappears)."""
+        if not self._prefix_on:
+            return
+        plen = len(req.prompt)
+        upto = (plen // self.pool.block) * self.pool.block
+        if upto:
+            self.pool.publish(req.rid, req.prompt, upto)
 
     # -------------------------------------------------------------- encode
     def _encode_fn(self, bucket: int, n: int):
@@ -682,7 +880,13 @@ class ServingEngine:
                         np.int32)
 
     def _chunked_step(self) -> None:
-        placed = self._admit()
+        fits = None
+        if self.paged:
+            # ONE byte budget drives admission: reservations are per-round
+            # (prefill below turns them into real allocations)
+            self._reserved = 0
+            fits = self._paged_fits
+        placed = self._admit(fits=fits)
         if placed:
             # encode and generation traffic arrive through one admit round:
             # encode jobs resolve immediately (freeing their slots), then
@@ -701,10 +905,25 @@ class ServingEngine:
         for s in active:
             toks[s, 0] = self.generated[s][-1]
         t0 = self.clock()
-        next_tok, self.kv.state = self._step(
-            self.params, self.kv.state, jnp.asarray(toks),
-            self._seed, self._gen_steps(), self._temp, self._topk,
-            self._topp)
+        if self.paged:
+            # block-table indirection for the jnp reference path: gather a
+            # dense-shaped view and feed the SAME jitted step the dense
+            # layout compiled — garbage rows from table padding are masked
+            # to exact zeros inside the attention (DESIGN.md §15), so the
+            # streams stay bit-identical. The step writes each slot's new
+            # row into the (donated) view; append_from scatters it back to
+            # the pool block its table maps that position to.
+            state = self.kv.gather_state()
+            next_tok, new_state = self._step(
+                self.params, state, jnp.asarray(toks),
+                self._seed, self._gen_steps(), self._temp, self._topk,
+                self._topp)
+            self.kv.append_from(new_state, active)
+        else:
+            next_tok, self.kv.state = self._step(
+                self.params, self.kv.state, jnp.asarray(toks),
+                self._seed, self._gen_steps(), self._temp, self._topk,
+                self._topp)
         next_tok = np.asarray(next_tok)
         self.metrics.record("decode", self.clock() - t0, len(active),
                             tenant=self.tenant)

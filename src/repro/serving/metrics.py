@@ -26,6 +26,12 @@ as ``Scheduler.pop_done()`` — and drains the labeled counters too.
 Prefix-cache counters (DESIGN.md §11) are plain integers (never grow):
 ``record_prefix(reused, prompt_tokens)`` per admission feeds the
 ``prefix_hit_rate`` / ``prefill_tokens_saved`` summary keys.
+
+KV memory gauges (DESIGN.md §15): a paged engine calls ``update_kv`` with
+the block pool's ``stats()`` dict each step — last-write-wins gauges
+(bytes in use, blocks allocated/free, prefix blocks shared by reference,
+COW forks, evictions), surfaced under the summary's ``kv`` key and drained
+by ``pop_summary()`` like everything else.
 """
 from __future__ import annotations
 
@@ -82,6 +88,8 @@ class ServeMetrics:
         # plain counters so N tenants cost O(N) ints, not N sample windows.
         self._label_steps: dict[tuple[str, str], list[int]] = {}
         self._label_waits: dict[tuple[str, str], int] = {}
+        # KV memory gauges (paged engines): last-write-wins snapshot dict
+        self._kv: dict = {}
 
     def record(self, kind: str, seconds: float, tokens: int,
                tenant: Optional[str] = None) -> None:
@@ -100,6 +108,11 @@ class ServeMetrics:
         if tenant is not None:
             key = (tenant, kind)
             self._label_waits[key] = self._label_waits.get(key, 0) + 1
+
+    def update_kv(self, gauges: dict) -> None:
+        """Overwrite the KV memory gauges (``BlockPool.stats()``): gauges
+        describe CURRENT state, so last write wins — no sample windows."""
+        self._kv = dict(gauges)
 
     def record_prefix(self, reused: int, prompt_tokens: int) -> None:
         """One admission's prefix-cache outcome: ``reused`` prompt tokens
@@ -158,6 +171,8 @@ class ServeMetrics:
                 self._prefix_reused / max(self._prefix_prompt_tokens, 1))
         if self._label_steps or self._label_waits:
             out["by_label"] = self._by_label()
+        if self._kv:
+            out["kv"] = dict(self._kv)
         return out
 
     def pop_summary(self) -> dict:
@@ -190,4 +205,11 @@ class ServeMetrics:
             if "tokens" in cell:
                 parts.append(f"{label}: {cell['tokens']} tok "
                              f"in {cell['steps']} steps")
+        kv = s.get("kv")
+        if kv:
+            parts.append(
+                f"kv: {kv.get('kv_bytes_in_use', 0) / 1024:.1f}KiB "
+                f"({kv.get('blocks_in_use', 0)}/{kv.get('blocks_total', 0)} "
+                f"blocks, {kv.get('prefix_blocks', 0)} prefix, "
+                f"{kv.get('cow_forks', 0)} forks)")
         return " | ".join(parts)

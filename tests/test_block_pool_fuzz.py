@@ -1,0 +1,233 @@
+"""Fuzz tests for BlockPool accounting (DESIGN.md §15).
+
+Random admit/release/publish/fork/match sequences over a family of
+overlapping prompts, with the block budget small enough that eviction is
+constantly active. The device buffers are never written here — the fuzz
+targets the HOST bookkeeping the paged engine trusts: free list, refcounts,
+per-request block tables, the prefix registry and the one-budget
+admission/eviction arithmetic. After EVERY operation:
+
+* **byte accounting** — ``kv_bytes_in_use`` equals ``block_bytes`` times
+  the recomputed union of blocks reachable from live tables and the
+  registry (tracked bytes never drift from the tables);
+* **reachability** — every non-free block is reachable from a live table
+  or the registry, and ``free + in_use == num_blocks`` (no leaks, no
+  double-frees);
+* **refcounts** — every block's refcount equals the model's count of live
+  tables holding it, and refcounts drain to exactly zero once every
+  request releases;
+* **sharing discipline** — a block reachable from two live requests is
+  ALWAYS in ``pool.shared`` (attached by reference: a prefix hit or a
+  copy-on-write fork share — never an aliasing bug);
+* **pin safety** — a block with refcount > 0 (in-flight request) is never
+  on the free list and never evicted, no matter the budget pressure.
+
+Driven by a seeded numpy RNG (always runs) and by hypothesis (skips
+cleanly without it).
+"""
+from collections import Counter
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.configs import get_config, reduced
+from repro.kernels.kv_pack import kv_row_bytes
+from repro.serving.block_pool import BlockPool, blocks_needed
+from repro.serving.prefix_cache import PREFIX_BLOCK
+
+B = PREFIX_BLOCK
+
+
+def _cfg():
+    return reduced(get_config("stablelm-3b")).replace(act="gelu")
+
+
+def _block_bytes(cfg):
+    return B * cfg.num_layers * kv_row_bytes(cfg.num_kv_heads, cfg.hd, 16,
+                                             fp_bytes=4)
+
+
+def _pool(budget_blocks):
+    cfg = _cfg()
+    return BlockPool(cfg, budget_blocks * _block_bytes(cfg))
+
+
+def _prompt(families, fam, length):
+    """A prompt sharing its leading tokens with family ``fam`` — overlap is
+    what makes registry chains collide/extend across operations."""
+    base = families[fam % len(families)]
+    length = 2 + length % (len(base) - 1)
+    return base[:length]
+
+
+def _check(pool, tables):
+    NB = pool.num_blocks
+    free = set(pool._free)
+    assert len(free) == len(pool._free), "duplicate block on the free list"
+    reachable = (set(b for t in tables.values() for b in t)
+                 | set(pool._registry.values()))
+    assert set(range(NB)) - free == reachable, (
+        "non-free blocks != union(live tables, registry)")
+    st = pool.stats()
+    assert st["kv_bytes_in_use"] == len(reachable) * pool.block_nbytes
+    assert len(pool._free) + pool.blocks_in_use() == NB
+    held = Counter(b for t in tables.values() for b in t)
+    for b in range(NB):
+        assert pool.refs[b] == held.get(b, 0), (
+            f"refcount drift at block {b}: pool {pool.refs[b]}, "
+            f"model {held.get(b, 0)}")
+    for b, n in held.items():
+        assert b not in free, "pinned block on the free list"
+        holders = sum(1 for t in tables.values() if b in t)
+        if holders >= 2:
+            assert b in pool.shared, (
+                f"block {b} reachable from {holders} live requests but "
+                "not marked shared")
+    # pool's own tables mirror the model exactly
+    assert {r: list(t) for r, t in pool._tables.items()} == tables
+
+
+def _run_ops(ops, budget_blocks=6):
+    rng_fam = np.random.default_rng(0)
+    families = [rng_fam.integers(1, 50, 24).astype(np.int32)
+                for _ in range(3)]
+    pool = _pool(budget_blocks)
+    tables: dict[int, list[int]] = {}       # rid -> block ids (model)
+    prompts: dict[int, np.ndarray] = {}
+    next_rid = 0
+    for code, fam, length in ops:
+        code = code % 5
+        live = sorted(tables)
+        if code == 0:                                       # admit
+            prompt = _prompt(families, fam, length)
+            need = blocks_needed(len(prompt), 1 + length % 6)
+            if pool.available() >= need:
+                rid, next_rid = next_rid, next_rid + 1
+                m, ids = pool.match(prompt)
+                pool.attach(rid, ids)
+                own = pool.alloc(rid, need - len(ids))
+                tables[rid] = list(ids) + own
+                prompts[rid] = prompt
+        elif code == 1 and live:                            # finish/release
+            rid = live[length % len(live)]
+            pool.release(rid)
+            del tables[rid], prompts[rid]
+        elif code == 2 and live:                            # publish
+            rid = live[length % len(live)]
+            p = prompts[rid]
+            pool.publish(rid, p, (len(p) // B) * B)
+        elif code == 3 and live:                            # COW fork
+            leader = live[length % len(live)]
+            p = prompts[leader]
+            share = tables[leader][:len(p) // B]
+            need = blocks_needed(len(p), 1 + fam % 4)
+            if pool.available() >= need:
+                rid, next_rid = next_rid, next_rid + 1
+                pool.attach(rid, share)
+                own = pool.alloc(rid, need - len(share))
+                tables[rid] = list(share) + own
+                prompts[rid] = p
+                pool.cow_forks += bool(share)
+        elif code == 4:                                     # match peek
+            m, ids = pool.match(_prompt(families, fam, length))
+            assert m % B == 0 and m == B * len(ids)
+        _check(pool, tables)
+    # drain: every request releases; refcounts must reach exactly zero
+    for rid in sorted(tables):
+        pool.release(rid)
+    tables.clear()
+    _check(pool, tables)
+    assert (pool.refs == 0).all()
+    # only registry residents remain in use, all evictable now
+    assert pool.blocks_in_use() == len(pool._registry)
+    assert pool.available() == pool.num_blocks
+
+
+# ------------------------------------------------------- randomized driver
+@pytest.mark.parametrize("seed", range(10))
+def test_random_pool_ops_preserve_accounting(seed):
+    rng = np.random.default_rng(seed)
+    ops = list(zip(rng.integers(0, 5, 250).tolist(),
+                   rng.integers(0, 3, 250).tolist(),
+                   rng.integers(0, 64, 250).tolist()))
+    _run_ops(ops, budget_blocks=4 + seed % 5)
+
+
+@given(ops=st.lists(st.tuples(st.integers(0, 4), st.integers(0, 2),
+                              st.integers(0, 63)), max_size=120))
+@settings(max_examples=60, deadline=None)
+def test_hypothesis_pool_ops_preserve_accounting(ops):
+    _run_ops(ops)
+
+
+# ----------------------------------------------------------- directed cases
+def test_pinned_prefix_blocks_survive_pressure():
+    pool = _pool(4)
+    p = np.arange(1, 2 * B + 2, dtype=np.int32)     # 2 full blocks + 1
+    own = pool.alloc(0, 2)
+    pool.publish(0, p, 2 * B)
+    pool.release(0)
+    assert pool.available() == 4                    # residents are evictable
+    # a second request attaches the chain by reference: now pinned
+    m, ids = pool.match(p)
+    assert m == 2 * B and ids == own
+    pool.attach(1, ids)
+    # exhaust the pool: only the two non-pinned blocks may be handed out
+    got = pool.alloc(2, 2)
+    assert set(got).isdisjoint(ids)
+    with pytest.raises(RuntimeError):
+        pool.alloc(3, 1)
+    assert ids == pool.table(1)                     # pinned chain intact
+    assert all(b in pool._digest_of for b in ids)   # ... and still published
+
+
+def test_match_never_covers_last_prompt_token():
+    pool = _pool(4)
+    p = np.arange(1, 2 * B + 1, dtype=np.int32)     # exactly 2 blocks
+    pool.alloc(0, 2)
+    pool.publish(0, p, 2 * B)
+    m, ids = pool.match(p)
+    # the last token must be computed for first-output logits: block 0 only
+    assert m == B and len(ids) == 1
+    pool.release(0)
+
+
+def test_cow_share_survives_leader_release():
+    pool = _pool(6)
+    p = np.arange(1, 2 * B + 4, dtype=np.int32)
+    leader = pool.alloc(0, 3)
+    share = leader[:2]                              # full prompt blocks
+    pool.attach(1, share)
+    own = pool.alloc(1, 1)
+    assert set(pool.shared) >= set(share)
+    pool.release(0)                                 # leader exits first
+    assert all(pool.refs[b] == 1 for b in share)    # follower still holds
+    assert all(b not in pool._free for b in share)
+    pool.release(1)
+    # nothing published: every block returns to the free list
+    assert (pool.refs == 0).all()
+    assert sorted(pool._free) == list(range(pool.num_blocks))
+    del p, own
+
+
+def test_budget_smaller_than_one_block_rejected():
+    cfg = _cfg()
+    with pytest.raises(ValueError):
+        BlockPool(cfg, _block_bytes(cfg) - 1)
+    with pytest.raises(ValueError):
+        BlockPool(cfg, 0)
+
+
+def test_eviction_is_lru_deepest_first():
+    pool = _pool(4)
+    p = np.arange(1, 3 * B + 2, dtype=np.int32)     # 3 full blocks
+    chain = pool.alloc(0, 3)
+    pool.publish(0, p, 3 * B)
+    pool.release(0)
+    # allocating past the free list evicts residents; deepest chain blocks
+    # were touched LAST-to-first on publish, so the TAIL evicts first
+    got = pool.alloc(1, 2)
+    assert got[0] not in chain                      # the one free block
+    assert got[1] == chain[2]                       # tail evicted before root
+    assert pool.evictions == 1

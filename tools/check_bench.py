@@ -102,6 +102,8 @@ def check_goodput(current: dict, baseline: dict) -> list[str]:
         if cur is None:
             print(f"WARN: virtual scenario {name!r} missing from current run")
             continue
+        if "summary" not in base or "summary" not in cur:
+            continue     # differently-shaped cells (e.g. paged_capacity)
         bg = base["summary"].get("goodput", {}).get("mean")
         cg = cur["summary"].get("goodput", {}).get("mean")
         drift = (bg is not None and cg is not None
@@ -118,6 +120,18 @@ def check_goodput(current: dict, baseline: dict) -> list[str]:
                 (cur["summary"].get("by_tenant") or {}).items()):
             print(f"    tenant {tenant}: goodput {ts.get('goodput')} "
                   f"({ts.get('n_good')}/{ts.get('n_counted')} good)")
+
+    # paged-vs-dense capacity scenario (DESIGN.md §15): shaped unlike the
+    # goodput scenarios (no summary/goodput CI), so it is reported from the
+    # CURRENT run here; CI's determinism check asserts its ratio floor.
+    cap = current.get("virtual", {}).get("paged_capacity")
+    if cap is not None:
+        print(f"INFO: virtual paged_capacity: "
+              f"{cap['paged']['peak_concurrent']} paged vs "
+              f"{cap['dense']['peak_concurrent']} dense concurrent under "
+              f"{cap['budget_bytes'] >> 10}KiB "
+              f"({cap['capacity_ratio']:.1f}x), "
+              f"streams_match={cap['streams_match']}")
     return failures
 
 
