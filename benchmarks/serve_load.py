@@ -41,9 +41,9 @@ from repro.deploy import ExecutionPlan, deploy
 from repro.models import api
 from repro.models.bert import init_bert_classifier, tinybert_config
 from repro.serving import (SLO, GenerationRequest, MultiTenantEngine,
-                           ServingEngine, VirtualClock, VirtualCost,
-                           Workload, bootstrap_summary, make_arrivals,
-                           run_load, run_trials)
+                           ReplicaSet, ServingEngine, VirtualClock,
+                           VirtualCost, Workload, bootstrap_summary,
+                           make_arrivals, run_load, run_trials)
 from repro.kernels.kv_pack import kv_row_bytes
 from repro.serving.loadgen import load_trace
 from repro.serving.prefix_cache import PREFIX_BLOCK
@@ -58,7 +58,8 @@ UTILIZATION = 0.5      # offered rate as a fraction of measured capacity
 
 
 def _build_engine(policy, backend, fuse, kv_bits, *, prefix_cache=0,
-                  slots=2, max_len=64, clock=None, max_queue=None):
+                  slots=2, max_len=64, clock=None, max_queue=None,
+                  warmup=False):
     cfg = reduced(get_config("stablelm-3b")).replace(act="gelu")
     plan = ExecutionPlan.build(cfg, policy, backend=backend, kv_bits=kv_bits,
                                fuse_epilogue=fuse, prefix_cache=prefix_cache)
@@ -67,7 +68,7 @@ def _build_engine(policy, backend, fuse, kv_bits, *, prefix_cache=0,
         params = deploy(params, plan).params
     kwargs = {} if clock is None else {"clock": clock}
     eng = ServingEngine(params, plan, slots=slots, max_len=max_len,
-                        max_queue=max_queue, **kwargs)
+                        max_queue=max_queue, warmup=warmup, **kwargs)
     return eng, cfg
 
 
@@ -121,10 +122,15 @@ def run_wall(quick: bool, trials: int | None, trace: list | None) -> dict:
         if use_int4:
             int4 = QuantPolicy(num_layers=cfg.num_layers, mode="int",
                                last_k_int4=cfg.num_layers)
+        # the int4 variant pre-warms (DESIGN.md §16): every (bucket, n)
+        # prefill/decode shape compiles before traffic, so its lifetime
+        # first-step latency sits next to the un-warmed fp32 row's compile
+        # spike in the step_latency block below
         eng, cfg = _build_engine(int4 if use_int4 else None,
                                  "pallas" if use_int4 else "reference",
                                  use_int4, 4 if use_int4 else 16,
-                                 prefix_cache=prefix_cache)
+                                 prefix_cache=prefix_cache,
+                                 warmup=use_int4)
         w = Workload(n_requests=n_requests, vocab=cfg.vocab_size,
                      prompt_len=(4, 12), new_tokens=(2, 6),
                      shared_prefix_frac=0.5 if prefix_cache else 0.0,
@@ -141,9 +147,19 @@ def run_wall(quick: bool, trials: int | None, trace: list | None) -> dict:
         # state a long-lived engine actually runs in.
         results = run_trials(lambda: eng, w, n_trials=n_trials,
                              trace=trace)
+        # first-vs-steady step latency (lifetime values — they survive the
+        # per-trial pop_summary drains): cold-start cost vs steady state
+        fin = eng.metrics.summary()
+        step_latency = {"warmup": use_int4}
+        for kind in ("prefill", "decode"):
+            for suffix in ("first_ms", "steady_p50_ms"):
+                key = f"{kind}_{suffix}"
+                if key in fin:
+                    step_latency[key] = fin[key]
         out[name] = {"calibration": calib,
                      "workload": {k: v for k, v in w.__dict__.items()
                                   if not isinstance(v, np.ndarray)},
+                     "step_latency": step_latency,
                      "summary": bootstrap_summary(results, slo)}
         g = out[name]["summary"].get("goodput", {})
         print(f"[wall] {name}: goodput {g.get('mean', 0):.3f} "
@@ -342,6 +358,86 @@ def run_paged_capacity(quick: bool) -> dict:
     return out
 
 
+def run_replica_scale(quick: bool) -> dict:
+    """Virtual-clock data-parallel scaling scenario (DESIGN.md §16).
+
+    The same burst — 24 short prompts, 16 new tokens each — served by ONE
+    2-slot engine and by a ``ReplicaSet`` of two such engines over the same
+    deployed model. Virtual time charges one ``decode_step_s`` per
+    ``engine_step()`` (a ReplicaSet pumps every member per step — replicas
+    are concurrent hardware) plus ``prefill_per_token_s`` for each prompt
+    token first entering service that step, so:
+
+    * ``capacity_ratio`` = single/replicas elapsed virtual time — ideal
+      scaling is 2.0; queueing edge effects land it ~1.9 (CI gates >= 1.8);
+    * ``streams_match`` — per-request token tuples byte-identical across
+      the two runs (dispatch must never influence tokens);
+    * goodput 1.0 on both — every request completes.
+
+    Deterministic like the rest of the virtual section: fixed seed, fixed
+    burst, fixed costs — two runs produce identical JSON."""
+    n, slots, max_len, new_tokens = 24, 2, 64, 16
+    cfg = reduced(get_config("stablelm-3b")).replace(act="gelu")
+    pol = QuantPolicy(num_layers=cfg.num_layers, mode="int",
+                      last_k_int4=cfg.num_layers)
+    plan = ExecutionPlan.build(cfg, pol, backend="reference", kv_bits=8)
+    model = deploy(api.init_model(cfg, jax.random.PRNGKey(0)), plan)
+
+    rng = np.random.default_rng(42)
+    prompts = [rng.integers(1, cfg.vocab_size,
+                            int(rng.integers(3, 6))).astype(np.int32)
+               for _ in range(n)]
+
+    def burst(make_engine):
+        vc = VirtualClock()
+        eng = make_engine(vc)
+        streams = [eng.submit(GenerationRequest(prompt=p,
+                                                max_new_tokens=new_tokens))
+                   for p in prompts]
+        plen = {s.rid: len(p) for s, p in zip(streams, prompts)}
+        seen: set = set()
+        for _ in range(10_000):
+            events = eng.engine_step()
+            # a rid's first event marks its prefill: charge its prompt
+            new = {rid for rid, _ in events} - seen
+            seen |= new
+            vc.advance(VCOST.decode_step_s + VCOST.prefill_per_token_s
+                       * sum(plen[r] for r in new))
+            if not eng.scheduler.has_work:
+                break
+        else:
+            raise RuntimeError("replica_scale burst did not drain")
+        done = eng.pop_done()
+        toks = [tuple(s.result().tokens) for s in streams]
+        good = sum(r.finish_reason == "length" for r in done)
+        return {"elapsed_virtual_s": vc(), "n_requests": n,
+                "goodput": {"mean": good / n}}, toks
+
+    single_cell, single_toks = burst(
+        lambda vc: ServingEngine(model, slots=slots, max_len=max_len,
+                                 clock=vc))
+    rep_cell, rep_toks = burst(
+        lambda vc: ReplicaSet(model, replicas=2, slots=slots,
+                              max_len=max_len, clock=vc))
+    ratio = single_cell["elapsed_virtual_s"] / max(
+        rep_cell["elapsed_virtual_s"], 1e-9)
+    out = {
+        "cost": VCOST.__dict__,
+        "replica_count": 2,
+        "single": single_cell,
+        "replicas": rep_cell,
+        "capacity_ratio": ratio,
+        "streams_match": single_toks == rep_toks,
+    }
+    print(f"[virtual] replica_scale: {single_cell['elapsed_virtual_s']:.3f}s "
+          f"single vs {rep_cell['elapsed_virtual_s']:.3f}s x2 "
+          f"({ratio:.2f}x), goodput "
+          f"{rep_cell['goodput']['mean']:.2f}/"
+          f"{single_cell['goodput']['mean']:.2f}, "
+          f"streams_match={out['streams_match']}")
+    return out
+
+
 def run_virtual(quick: bool) -> dict:
     """Virtual-clock section: deterministic goodput/shed/reject numbers.
 
@@ -389,6 +485,7 @@ def main(quick: bool = False, trials: int | None = None,
     virtual = run_virtual(quick)
     virtual.update(run_virtual_encoder(quick))
     virtual["paged_capacity"] = run_paged_capacity(quick)
+    virtual["replica_scale"] = run_replica_scale(quick)
     if out:
         payload = {
             "bench": "serve_load",

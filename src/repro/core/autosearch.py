@@ -15,7 +15,10 @@ The scorer is a callback (``score_fn(policy) -> accuracy``) so the search is
 decoupled from how candidates are evaluated — the quality bench deploys a
 real artifact per candidate (benchmarks/table1_glue.py --artifact), unit
 tests use synthetic scorers. Cost: ``num_layers + 1`` probe scores plus at
-most ``num_layers`` greedy scores.
+most ``num_layers`` greedy scores — and with
+:func:`cached_probe_scorer` wrapped around the deploy path, each of those
+scores costs an EVAL, not a re-deploy: every candidate's packed params are
+assembled bit-exactly by slicing two cached uniform-grid deploys.
 """
 from __future__ import annotations
 
@@ -24,7 +27,8 @@ from typing import Callable, Sequence
 
 from .policy import QuantPolicy
 
-__all__ = ["SearchResult", "load_search_policy", "search_mixed_precision"]
+__all__ = ["SearchResult", "cached_probe_scorer", "load_search_policy",
+           "search_mixed_precision"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,6 +113,80 @@ def search_mixed_precision(num_layers: int,
     return SearchResult(policy=mk(chosen), accuracy=best,
                         base_accuracy=base, sensitivity=ranking,
                         trajectory=tuple(trajectory), floor=floor)
+
+
+def cached_probe_scorer(deploy_fn: Callable[[QuantPolicy], object],
+                        score_fn: Callable[[object], float]
+                        ) -> Callable[[QuantPolicy], float]:
+    """A drop-in ``score_fn`` for :func:`search_mixed_precision` that makes
+    each probe cost a SCORE, not a deploy (DESIGN.md §13).
+
+    The naive probe loop re-deploys the full model per candidate —
+    ``num_layers + 1`` deploys (weight-scale calibration, activation
+    calibration forwards, packing) before the greedy walk even starts. But
+    a deployed candidate is assembled from ingredients that never depend on
+    the MIX of layers: ``deploy()``'s calibration forward runs in fp (so a
+    learned scale depends only on its OWN layer's grid), and packed codes /
+    scales are per-layer. A mixed-policy deploy is therefore EXACTLY the
+    per-layer interleave of the all-int4 and all-int8 grid deploys —
+    bit-for-bit, not approximately (asserted against the full probe by
+    benchmarks/table1_glue.py).
+
+    So this scorer runs ``deploy_fn`` once per uniform grid (lazily), then
+    assembles every candidate by slicing the stacked layer segments out of
+    the cached grids under the candidate's own plan; only ``score_fn``
+    (the cached eval split) runs per candidate. Scores memoize on the
+    per-layer bit vector, so repeated candidates are free. Families whose
+    deployed tree has no ``'layers'`` stack (xlstm / hybrid / encdec), or
+    a bit width outside {4, default_bits}, fall back to a full
+    ``deploy_fn`` call for that candidate.
+    """
+    grids: dict = {}    # w_bits -> uniform-grid DeployedModel
+    memo: dict = {}     # per-layer bit vector -> score
+
+    def grid_for(policy: QuantPolicy, bits: int):
+        if bits not in grids:
+            all_l = tuple(range(policy.num_layers))
+            grids[bits] = deploy_fn(dataclasses.replace(
+                policy, int4_layers=(all_l if bits == 4 else ()),
+                last_k_int4=0))
+        return grids[bits]
+
+    def assemble(policy: QuantPolicy):
+        import jax
+
+        from ..deploy import DeployedModel, ExecutionPlan
+
+        base = grid_for(policy, policy.default_bits)
+        if "layers" not in base.params:
+            return deploy_fn(policy)        # per-family stacks: full path
+        plan = ExecutionPlan.build(base.plan.cfg, policy,
+                                   **base.plan.build_kwargs())
+        stacks = []
+        for (s, e, spec) in plan.segments:
+            if spec.w_bits not in (4, policy.default_bits):
+                return deploy_fn(policy)
+            g = grid_for(policy, spec.w_bits)
+            for (gs, ge, _), stack in zip(g.plan.segments,
+                                          g.params["layers"]):
+                if gs <= s and e <= ge:
+                    stacks.append(jax.tree.map(
+                        lambda a, lo=s, hi=e, off=gs: a[lo - off:hi - off],
+                        stack))
+                    break
+            else:                            # grid segmented unexpectedly
+                return deploy_fn(policy)
+        params = dict(base.params)
+        params["layers"] = stacks
+        return DeployedModel(plan=plan, params=params)
+
+    def score(policy: QuantPolicy) -> float:
+        key = tuple(policy.weight_bits_vector().tolist())
+        if key not in memo:
+            memo[key] = float(score_fn(assemble(policy)))
+        return memo[key]
+
+    return score
 
 
 def load_search_policy(path: str, num_layers: int) -> QuantPolicy:

@@ -70,7 +70,20 @@ def deploy(params, plan: ExecutionPlan, calib_batches: Optional[list] = None,
         # retargets the stored scales onto its grid (DESIGN.md §13)
         params_int = _rescale_act_scales(
             params_int, cfg, _act_scale_factors(plan, None, plan.act_bits))
-    return DeployedModel(plan=plan, params=params_int)
+    return DeployedModel(plan=plan, params=_place(params_int, plan))
+
+
+def _place(params, plan: ExecutionPlan):
+    """Place packed params on the plan's tp mesh (DESIGN.md §16); a tp=1
+    plan keeps the host/default-device tree untouched. Called by both
+    ``deploy()`` and ``DeployedModel.load`` — artifacts store full logical
+    arrays (``checkpoint/manager.py`` gathers on save), so resharding to a
+    different tp is pure placement, no format change."""
+    mesh = plan.make_mesh()
+    if mesh is None:
+        return params
+    from ..distributed.sharding import place_serving, serving_param_specs
+    return place_serving(params, mesh, serving_param_specs(params))
 
 
 # ------------------------------------------------------ act-grid retargeting
@@ -190,7 +203,15 @@ class DeployedModel:
         return ckpt.save_artifact(path, self.params, meta)
 
     @classmethod
-    def load(cls, path: str) -> "DeployedModel":
+    def load(cls, path: str, *, tp: Optional[int] = None) -> "DeployedModel":
+        """Load (and place) a saved artifact.
+
+        ``tp`` overrides the RECORDED tensor-parallel layout: the plan is
+        rebuilt at the new degree (re-validated — divisibility errors
+        surface here, not in GSPMD) and the stored full logical arrays are
+        placed under the new mesh, so a tp=2 artifact serves at tp=1 or
+        tp=4 without a rewrite. None keeps the recorded layout.
+        """
         params, meta = ckpt.load_artifact(path)
         if meta.get("format") != ARTIFACT_FORMAT:
             raise ValueError(f"{path}: not a {ARTIFACT_FORMAT} artifact "
@@ -199,12 +220,17 @@ class DeployedModel:
             raise ValueError(
                 f"{path}: artifact version {meta['version']} is newer than "
                 f"this build understands ({ARTIFACT_VERSION})")
-        return cls(plan=plan_from_meta(meta), params=params)
+        if tp is not None:
+            meta = dict(meta)
+            meta["build"] = {**meta["build"], "tp": int(tp)}
+        plan = plan_from_meta(meta)
+        return cls(plan=plan, params=_place(params, plan))
 
     # ------------------------------------------------------------- serve
-    def engine(self, *, slots: int = 8, max_len: int = 512, metrics=None):
+    def engine(self, *, slots: int = 8, max_len: int = 512, metrics=None,
+               warmup: bool = False):
         """A ServingEngine over this artifact (lazy import: keeps the
         artifact layer usable without pulling the serving stack)."""
         from ..serving.engine import ServingEngine
         return ServingEngine(self, slots=slots, max_len=max_len,
-                             metrics=metrics)
+                             metrics=metrics, warmup=warmup)

@@ -90,6 +90,53 @@ def resolve_segments(cfg: ModelConfig, policy: Optional[QuantPolicy],
                                             act_bits=act_bits)
 
 
+def _validate_tp(cfg: ModelConfig, policy, backend: str, act_bits,
+                 segments, tp: int) -> None:
+    """Structural validation of a tensor-parallel plan (DESIGN.md §16).
+
+    Every rule that would otherwise surface as a GSPMD shape error deep in
+    deploy (or as silently wrong sampling) is surfaced here, at build time,
+    with the knob that caused it named.
+    """
+    if backend != "reference":
+        raise ValueError(
+            f"tp={tp}: the pallas kernels are single-device; shard on "
+            "backend='reference' (a mesh-aware kernel would land behind "
+            "this same build-time check)")
+    if cfg.family in TOKEN_ONLY_FAMILIES:
+        raise ValueError(
+            f"tp={tp}: no sharding rules for family {cfg.family!r}'s fp "
+            "recurrent decode state; transformer-cache families only")
+    if policy is None or policy.mode != "int":
+        raise ValueError(
+            f"tp={tp} shards DEPLOYED integer weights (row-parallel "
+            "partial sums stay exact in int32); build from a mode='int' "
+            "policy")
+    if act_bits == 0:
+        raise ValueError(
+            f"tp={tp} needs integer accumulation for byte-identical "
+            "streams; act_bits=0 contracts in floating point over the "
+            "sharded axis")
+    for dim_name, dim in (("num_heads", cfg.num_heads),
+                          ("num_kv_heads", cfg.num_kv_heads),
+                          ("d_ff", cfg.d_ff)):
+        if dim % tp:
+            raise ValueError(
+                f"tp={tp} does not divide {dim_name}={dim}; pick a tp "
+                "that divides the attention-head and FFN dims")
+    # int4 codes pack 2 values per int8 byte along the CONTRACTING axis
+    # (core/packing.py pack_axis=-2), so a row-parallel int4 weight shards
+    # its PACKED K/2 rows: K must divide by 2*tp, not just tp.
+    if any(sp.w_bits == 4 for _, _, sp in segments):
+        for dim_name, dim in (("num_heads*head_dim", cfg.num_heads * cfg.hd),
+                              ("d_ff", cfg.d_ff)):
+            if dim % (2 * tp):
+                raise ValueError(
+                    f"tp={tp} with int4 segments: packed codes shard the "
+                    f"K/2 nibble-pair rows, so {dim_name}={dim} must "
+                    f"divide by 2*tp={2 * tp}")
+
+
 def _segment_units(cfg: ModelConfig) -> int:
     if cfg.family == "xlstm":
         return cfg.num_layers // cfg.slstm_every
@@ -141,6 +188,14 @@ class ExecutionPlan:
     #: refcounted block pool — block tables, prefix sharing by reference,
     #: copy-on-write forks, one byte budget for admission AND eviction.
     kv_paging: str = "dense"
+    #: tensor-parallel degree (DESIGN.md §16): how many devices the packed
+    #: int4/int8 weight codes, scales, biases and KV heads are sharded
+    #: across on a 1-axis ("model",) mesh. 1 (default; every artifact
+    #: written before this knob existed loads as it) keeps the
+    #: single-device layout. Reference backend only — integer accumulation
+    #: makes the row-parallel partial sums exact, so streams are
+    #: byte-identical to tp=1.
+    tp: int = 1
 
     # ------------------------------------------------------------- build
     @classmethod
@@ -152,7 +207,8 @@ class ExecutionPlan:
               prefill_batch: int = 1,
               act_bits: Optional[int] = None,
               mode: str = "decode",
-              kv_paging: str = "dense") -> "ExecutionPlan":
+              kv_paging: str = "dense",
+              tp: int = 1) -> "ExecutionPlan":
         """Resolve + validate a plan.
 
         backend       'pallas' routes int matmuls (and quantized-KV decode
@@ -198,6 +254,13 @@ class ExecutionPlan:
                       need. Needs the chunked slot-cache prefill path and
                       mode='decode'. Token streams are bit-identical to
                       'dense'.
+        tp            tensor-parallel degree (DESIGN.md §16): shards packed
+                      weight codes/scales column- or row-parallel and KV
+                      heads across a ("model",) mesh of ``tp`` devices.
+                      Validated structurally here (divisibility, backend,
+                      family); the mesh itself is built lazily at placement
+                      (:meth:`make_mesh`), so a sharded plan/artifact can be
+                      inspected on any host.
         """
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, "
@@ -301,12 +364,18 @@ class ExecutionPlan:
         sampling = SamplingParams.resolve(sampling)
         segments = resolve_segments(cfg, policy, use_pallas, fuse_epilogue,
                                     act_bits=act_bits)
+
+        tp = int(tp)
+        if tp < 1:
+            raise ValueError(f"tp must be >= 1, got {tp}")
+        if tp > 1:
+            _validate_tp(cfg, policy, backend, act_bits, segments, tp)
         return cls(cfg=cfg, policy=policy, backend=backend, kv_bits=kv_bits,
                    prefill_mode=prefill_mode, decode_dtype=decode_dtype,
                    fuse_epilogue=fuse_epilogue, segments=tuple(segments),
                    default_sampling=sampling, prefix_cache=prefix_cache,
                    prefill_batch=prefill_batch, act_bits=act_bits, mode=mode,
-                   kv_paging=kv_paging)
+                   kv_paging=kv_paging, tp=tp)
 
     # ------------------------------------------------------------ queries
     @property
@@ -321,6 +390,18 @@ class ExecutionPlan:
     def deployed(self) -> bool:
         """True when the segments carry deployed-int QuantSpecs."""
         return self.policy is not None and self.policy.mode == "int"
+
+    def make_mesh(self):
+        """The ("model",) mesh for this plan's tp degree, or None at tp=1.
+
+        Lazy on purpose: device availability is checked at PLACEMENT time,
+        not at build — a tp=4 artifact's plan must be constructible (for
+        inspection, or to rebuild at a different tp) on a 1-device host.
+        """
+        if self.tp == 1:
+            return None
+        from ..launch.mesh import make_tp_mesh
+        return make_tp_mesh(self.tp)
 
     def decode_state(self, batch: int, max_len: int, *,
                      as_specs: bool = False, per_slot_len: bool = False,
@@ -350,13 +431,15 @@ class ExecutionPlan:
                 "prefill_batch": self.prefill_batch,
                 "act_bits": self.act_bits,
                 "mode": self.mode,
-                "kv_paging": self.kv_paging}
+                "kv_paging": self.kv_paging,
+                "tp": self.tp}
 
     def describe(self) -> str:
         segs = ", ".join(f"[{s}:{e}) w{sp.w_bits or 'fp'}/a{sp.a_bits or 'fp'}"
                          for s, e, sp in self.segments)
         mode = "" if self.mode == "decode" else f"mode={self.mode}, "
         paging = "" if self.kv_paging == "dense" else "kv_paging=paged, "
+        paging += "" if self.tp == 1 else f"tp={self.tp}, "
         return (f"ExecutionPlan({self.cfg.name}, {mode}{paging}"
                 f"backend={self.backend}, "
                 f"kv_bits={self.kv_bits}, prefill={self.prefill_mode}, "

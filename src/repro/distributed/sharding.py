@@ -162,6 +162,85 @@ def state_specs(state_tree, mesh: Mesh) -> dict:
     return jax.tree_util.tree_map_with_path(spec, state_tree)
 
 
+# ---------------------------------------------------- serving (tp) specs
+# DESIGN.md §16: tensor-parallel serving reuses the training _RULES for the
+# packed weight tree (column-parallel wq/wk/wv/wqkv/w1/w3/w13, row-parallel
+# wo/w2 — GSPMD inserts the int32 psum), with two serving-only overrides and
+# a KV-head rule the training state_specs never needed.
+
+#: replicated in serving regardless of the training rule: logits feed the
+#: fp sampler, whose reduction order must match tp=1 EXACTLY for the
+#: byte-identical-streams bar — so the lm_head matmul (and the embedding
+#: gather feeding it through tied weights) runs replicated. Both are a
+#: small fraction of the int4 footprint; vocab sharding is a training
+#: memory concern, not a serving one.
+_SERVING_REPLICATED = re.compile(r"(^|/)(embed|pos_embed|lm_head)$")
+
+
+def serving_param_specs(params) -> dict:
+    """PartitionSpec tree for a DEPLOYED (packed-int) param tree under the
+    serving ("model",) mesh.
+
+    Same regex table as training ``param_specs`` — packed codes keep their
+    weight's spec: column-parallel shards the out dim N (nibbles pack along
+    K, so N-sharding never splits a pair); row-parallel shards the PACKED
+    K/2 rows (divisibility enforced at plan build). Scales ``s_w`` (1, N)
+    follow their weight's out-channel sharding; activation scales ``s_a``
+    and row-parallel biases fall through to replicated.
+    """
+    def spec(path, leaf):
+        if _SERVING_REPLICATED.search(_path_str(path)):
+            ndim = getattr(leaf, "ndim", len(getattr(leaf, "shape", ())))
+            return P(*((None,) * ndim))
+        return spec_for(path, leaf)
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def serving_state_specs(state_tree, mesh: Mesh) -> dict:
+    """KV-head partitioning for the serving decode state and the paged
+    block-pool buffers (DESIGN.md §16).
+
+    The training ``state_specs`` rule only knows the fp ``k``/``v`` rows;
+    serving also carries the quantized layout (DESIGN.md §8):
+
+    ===============  ==============================  =====================
+    leaf             shape                            "model" axis
+    ===============  ==============================  =====================
+    k / v            (L, B, S, H_kv, hd)              heads (ndim-2)
+    k_q / v_q        (L, B, S, H_kv, ceil(hd/2))      heads (ndim-2)
+    k_scale/v_scale  (L, B, S, H_kv)                  heads (ndim-1)
+    len / cursors    host-side or per-slot ints       replicated
+    ===============  ==============================  =====================
+
+    KV codes pack along head_dim, so head sharding never splits a nibble
+    pair. The same basenames cover the block pool's (L, NB, block, H_kv, .)
+    buffers. Anything unmatched (or non-divisible) stays replicated —
+    correct, just not partitioned.
+    """
+    n_model = mesh.shape.get("model", 1)
+
+    def spec(path, leaf):
+        ndim, shape = leaf.ndim, leaf.shape
+        base = _path_str(path).rsplit("/", 1)[-1]
+        sp = [None] * ndim
+        if base in ("k", "v", "k_q", "v_q") and ndim >= 2 \
+                and shape[ndim - 2] % n_model == 0:
+            sp[ndim - 2] = "model"
+        elif base in ("k_scale", "v_scale") and ndim >= 1 \
+                and shape[ndim - 1] % n_model == 0:
+            sp[ndim - 1] = "model"
+        return P(*sp)
+    return jax.tree_util.tree_map_with_path(spec, state_tree)
+
+
+def place_serving(tree, mesh: Mesh, specs):
+    """``device_put`` under NamedShardings — both the initial host→mesh
+    placement in ``deploy()`` and the reshard-on-load path (artifacts store
+    full logical arrays, so resharding to a different tp is pure
+    placement)."""
+    return jax.device_put(tree, shardings_for(tree, mesh, specs))
+
+
 def shardings_for(tree, mesh: Mesh, specs=None):
     specs = specs if specs is not None else param_specs(tree)
     return jax.tree.map(lambda sp: NamedSharding(mesh, sp), specs,

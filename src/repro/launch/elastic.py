@@ -22,7 +22,10 @@ def elastic_resume(state_like, ckpt_manager, *, model_parallel: int = 0,
                    devices=None):
     """(state, step, mesh) from the latest checkpoint on the live devices."""
     devices = devices if devices is not None else jax.devices()
-    mesh = make_mesh_for_devices(len(devices), model_parallel)
+    # restart contract: model-parallel degree preserved when the survivor
+    # count allows, else halved — so degrading is explicitly opted into here
+    mesh = make_mesh_for_devices(len(devices), model_parallel,
+                                 allow_degrade=True).mesh
     state, step = ckpt_manager.restore(state_like)
     if state is None:
         return None, None, mesh

@@ -29,6 +29,14 @@ engine emits it (the TokenStream callback form). ``--kv-paging paged``
 block pool; ``--policy-from search.json`` deploys the exact per-layer bit
 assignment a §13 auto-search run chose.
 
+Scale axes (DESIGN.md §16): ``--tp N`` shards the deployed weights and KV
+heads over N devices (with ``--artifact`` it RESHARDS the saved layout to
+N at load); ``--replicas N`` serves the burst through a data-parallel
+``ReplicaSet`` of N engines over the one deployed model; ``--warmup``
+pre-compiles every (bucket, batch) prefill/decode shape before traffic so
+the first request pays no jit cost (the first-vs-steady split shows up in
+the metrics report).
+
 The engine itself lives in ``repro.serving``; plans/artifacts in
 ``repro.deploy``. ``Request`` and ``ServingEngine`` stay importable from
 here for backward compatibility.
@@ -63,7 +71,8 @@ def _build_encoder_model(args):
     plan = ExecutionPlan.build(cfg, policy, backend=args.backend,
                                mode="encoder",
                                prefill_batch=max(args.prefill_batch, 1),
-                               act_bits=args.act_bits)
+                               act_bits=args.act_bits,
+                               tp=args.tp or 1)
     params = init_bert_classifier(cfg, 2, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
     calib = [{"tokens": rng.integers(1, cfg.vocab_size,
@@ -99,7 +108,8 @@ def _build_model(args):
                                                 * (1 << 20)),
                                prefill_batch=args.prefill_batch,
                                act_bits=args.act_bits,
-                               kv_paging=args.kv_paging)
+                               kv_paging=args.kv_paging,
+                               tp=args.tp or 1)
     params = api.init_model(cfg, jax.random.PRNGKey(0))
     return deploy(params, plan)
 
@@ -206,6 +216,23 @@ def main(argv=None):
     p.add_argument("--stream", action="store_true",
                    help="print every token as the engine emits it "
                         "(TokenStream callback form)")
+    p.add_argument("--tp", type=int, default=None, metavar="N",
+                   help="tensor-parallel degree (DESIGN.md §16): shard "
+                        "packed weights + KV heads over N devices on a "
+                        "('model',) mesh; with --artifact, RESHARDS the "
+                        "saved layout to N at load (a tp=2 export serves "
+                        "at tp=1 or tp=4); default keeps the recorded "
+                        "layout (or 1 when building in-process)")
+    p.add_argument("--replicas", type=int, default=1, metavar="N",
+                   help="data-parallel replica count (DESIGN.md §16): N "
+                        "engines over the ONE deployed model behind one "
+                        "admission queue (least-loaded dispatch, shared "
+                        "rid space); composes with --tp")
+    p.add_argument("--warmup", action="store_true",
+                   help="pre-compile every (bucket, batch) prefill/decode "
+                        "shape before serving traffic, so no request pays "
+                        "first-call jit cost (the first-vs-steady latency "
+                        "split stays visible in the metrics report)")
     p.add_argument("--artifact", default=None, metavar="DIR",
                    help="serve a saved DeployedModel (repro.deploy) — no fp "
                         "weights, no recalibration; plan/arch flags come "
@@ -227,6 +254,13 @@ def main(argv=None):
                 "--kv-paging paged (or a paged artifact)")
     if args.n < 1:
         p.error(f"--n must be >= 1, got {args.n}")
+    if args.tp is not None and args.tp < 1:
+        p.error(f"--tp must be >= 1, got {args.tp}")
+    if args.replicas < 1:
+        p.error(f"--replicas must be >= 1, got {args.replicas}")
+    if args.tenant and (args.tp is not None or args.replicas > 1):
+        p.error("--tenant engines serve each artifact's own recorded "
+                "layout; --tp/--replicas apply to single-model serving")
     if args.tenant:
         if args.artifact or args.export:
             p.error("--tenant hosts saved artifacts; it cannot be combined "
@@ -234,7 +268,7 @@ def main(argv=None):
         return _main_tenants(args)
 
     if args.artifact:
-        model = DeployedModel.load(args.artifact)
+        model = DeployedModel.load(args.artifact, tp=args.tp)
         if (args.act_bits is not None
                 and args.act_bits != model.plan.act_bits):
             from ..deploy import retarget_act_bits
@@ -257,8 +291,17 @@ def main(argv=None):
     cfg = model.plan.cfg
     kv_budget = (int(args.kv_budget_mb * (1 << 20))
                  if args.kv_budget_mb is not None else None)
-    eng = ServingEngine(model, slots=args.slots, max_len=args.max_len,
-                        max_queue=args.max_queue, kv_budget_bytes=kv_budget)
+    if args.replicas > 1:
+        from ..serving import ReplicaSet
+        eng = ReplicaSet(model, replicas=args.replicas, slots=args.slots,
+                         max_len=args.max_len, max_queue=args.max_queue,
+                         kv_budget_bytes=kv_budget, warmup=args.warmup)
+        print(f"[serve] replica set: {args.replicas} engines, "
+              f"{args.slots} slots each")
+    else:
+        eng = ServingEngine(model, slots=args.slots, max_len=args.max_len,
+                            max_queue=args.max_queue,
+                            kv_budget_bytes=kv_budget, warmup=args.warmup)
     if model.plan.mode == "encoder":
         return _serve_encoder_burst(args, eng, cfg)
     sampling = SamplingParams(temperature=args.temperature,

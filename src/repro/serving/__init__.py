@@ -29,6 +29,11 @@ The deployment side of the paper, grown into a real package:
 * ``tenants``    — ``MultiTenantEngine``: several deployed artifacts in one
   process behind one pump, per-tenant bounded queues + token-budget quotas
   (``QuotaExceededError``) and deficit-round-robin fair-share admission
+* ``replicas``   — ``ReplicaSet`` (DESIGN.md §16): N engines over ONE
+  deployed model behind one admission queue — least-loaded dispatch, one
+  shared rid space, every replica pumped per ``engine_step()`` (concurrent
+  data-parallel capacity, composing with the plan's tensor-parallel ``tp``
+  axis)
 * ``metrics``    — latency/throughput recorder (tokens/sec, p50/p99 steps,
   TTFT and queue-wait percentiles, prefix hit rate; bounded windows +
   ``pop_summary()`` drain)
@@ -62,6 +67,7 @@ from .loadgen import (SLO, Arrival, LoadResult, VirtualCost, Workload,
                       trace_arrivals)
 from .metrics import ServeMetrics
 from .prefix_cache import PrefixCache
+from .replicas import ReplicaSet
 from .scheduler import Scheduler
 from .tenants import MultiTenantEngine, QuotaExceededError, TenantState
 
@@ -69,7 +75,8 @@ __all__ = ["Arrival", "BlockPool", "Clock", "ENCODE_TASKS", "EncodeHandle",
            "EncodeRequest", "EncodeResult", "FINISH_REASONS",
            "GenerationRequest", "GenerationResult", "LoadResult",
            "MultiTenantEngine", "PagedKVCache", "PrefixCache",
-           "QueueFullError", "QuotaExceededError", "Request", "SLO",
+           "QueueFullError", "QuotaExceededError", "ReplicaSet", "Request",
+           "SLO",
            "SYSTEM_CLOCK", "SamplingParams", "Scheduler", "ServeMetrics",
            "ServingEngine", "SlotKVCache", "TenantState", "TokenStream",
            "VirtualClock", "VirtualCost", "Workload", "blocks_needed",

@@ -182,7 +182,7 @@ class BlockPool:
 
     def __init__(self, cfg: ModelConfig, budget_bytes: int, *,
                  dtype=jnp.float32, kv_bits: int = 16,
-                 block: int = PREFIX_BLOCK):
+                 block: int = PREFIX_BLOCK, mesh=None):
         if budget_bytes <= 0:
             raise ValueError(f"budget_bytes must be > 0, got {budget_bytes}")
         self.cfg = cfg
@@ -213,6 +213,14 @@ class BlockPool:
             self.bufs = {
                 "k": jnp.zeros((L, NB, self.block, Hkv, hd), dtype),
                 "v": jnp.zeros((L, NB, self.block, Hkv, hd), dtype)}
+        if mesh is not None:
+            # tensor-parallel serving (DESIGN.md §16): KV heads partition
+            # over "model"; the block tables below are host-side numpy, so
+            # the indirection layer is replicated by construction.
+            from ..distributed.sharding import (place_serving,
+                                                serving_state_specs)
+            self.bufs = place_serving(
+                self.bufs, mesh, serving_state_specs(self.bufs, mesh))
         # host structures; allocation order is deterministic (ascending ids)
         self._free: list[int] = list(range(NB - 1, -1, -1))
         self.refs = np.zeros(NB, np.int64)

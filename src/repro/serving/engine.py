@@ -96,7 +96,8 @@ class ServingEngine:
                  metrics: Optional[ServeMetrics] = None,
                  clock: Clock = SYSTEM_CLOCK,
                  tenant: Optional[str] = None,
-                 kv_budget_bytes: Optional[int] = None):
+                 kv_budget_bytes: Optional[int] = None,
+                 warmup: bool = False):
         if isinstance(model, DeployedModel):
             if plan is not None and plan != model.plan:
                 raise ValueError(
@@ -111,6 +112,16 @@ class ServingEngine:
         self.plan = plan
         self.cfg = cfg = plan.cfg
         self.segments = segments = plan.segments
+        # tensor-parallel serving (DESIGN.md §16): a tp>1 plan owns a
+        # ("model",) mesh; weights/KV are partitioned over it. deploy()
+        # already places DeployedModel params, so re-placing is a no-op
+        # there — this covers the raw params + plan constructor form.
+        self.mesh = plan.make_mesh()
+        if self.mesh is not None:
+            from ..distributed.sharding import (place_serving,
+                                                serving_param_specs)
+            params = place_serving(params, self.mesh,
+                                   serving_param_specs(params))
         self.params = params
         self.slots = slots
         self.max_len = max_len
@@ -184,19 +195,20 @@ class ServingEngine:
                     kv_budget_bytes = (slots * (max_len // PREFIX_BLOCK)
                                        * block_bytes)
                 self.pool = BlockPool(cfg, kv_budget_bytes, dtype=self.dtype,
-                                      kv_bits=self.kv_bits)
+                                      kv_bits=self.kv_bits, mesh=self.mesh)
                 self.kv = PagedKVCache(self.pool, slots, max_len)
                 # plan.prefix_cache > 0 switches prefix reuse on; the BYTE
                 # value is absorbed by the pool budget (the registry shares
                 # the pool's blocks instead of owning a second store)
                 self._prefix_on = plan.prefix_cache > 0
             else:
-                self.kv = SlotKVCache.from_plan(plan, slots, max_len)
+                self.kv = SlotKVCache.from_plan(plan, slots, max_len,
+                                                mesh=self.mesh)
                 if plan.prefix_cache:
                     self.prefix_cache = PrefixCache(plan.prefix_cache)
         else:
             self.kv = None
-            self.state = plan.decode_state(slots, max_len)
+            self.state = self._place_state(plan.decode_state(slots, max_len))
             self.pos = np.zeros(slots, np.int32)   # per-slot prompt cursor
             self._cursor = 0   # host mirror of the SHARED token-mode cursor
 
@@ -209,6 +221,75 @@ class ServingEngine:
 
         self._step = jax.jit(step, donate_argnums=(1,))
         self._sample1 = jax.jit(sample_token)   # prefill's first token
+        if warmup:
+            self._warmup()
+
+    def _place_state(self, state):
+        """Partition a freshly allocated decode state over the tp mesh
+        (no-op at tp=1)."""
+        if self.mesh is None:
+            return state
+        from ..distributed.sharding import place_serving, serving_state_specs
+        return place_serving(state, self.mesh,
+                             serving_state_specs(state, self.mesh))
+
+    def _warmup(self) -> None:
+        """Pre-populate the (bucket, n) compile-key caches before traffic
+        arrives (DESIGN.md §16): every prefill/encode bucket on the ladder
+        (8, 16, ... max_len doubling) times every power-of-two group size up
+        to ``prefill_batch``, plus the decode step. Each jitted function is
+        actually CALLED on throwaway zeros — ``lower().compile()`` would not
+        populate the pjit call cache — and the decode step is warmed against
+        a THROWAWAY state, never the live (donated) cache. Nothing is
+        recorded in metrics: the first *real* step's latency then shows the
+        steady-state cost, which is exactly what the first-vs-steady metric
+        split exists to surface."""
+        buckets, b = [], 8
+        while b < self.max_len:
+            buckets.append(b)
+            b *= 2
+        buckets.append(self.max_len)
+        ns, n = [], 1
+        while n <= self.prefill_batch:
+            ns.append(n)
+            n *= 2
+        if self.mode == "encoder":
+            for bucket in buckets:
+                for n in ns:
+                    self._encode_fn(bucket, n)(
+                        self.params, jnp.zeros((n, bucket), jnp.int32),
+                        jnp.ones(n, jnp.int32))
+            return
+        if self.prefill_mode != "chunked":
+            # token mode: one compile key — the batched step itself; warmed
+            # below with the throwaway state
+            state = self._place_state(
+                self.plan.decode_state(self.slots, self.max_len))
+        else:
+            for bucket in buckets:
+                for n in ns:
+                    self._prefill_fn(bucket, n)(
+                        self.params, jnp.zeros((n, bucket), jnp.int32))
+            if (self.paged and self._prefix_on) \
+                    or self.prefix_cache is not None:
+                B = self.pool.block if self.paged else self.prefix_cache.block
+                for bucket in buckets:
+                    S = -(-bucket // B) * B
+                    for n in ns:
+                        self._chunk_fn(S, n)(
+                            self.params, self.plan.decode_state(n, S),
+                            jnp.zeros((n, B), jnp.int32))
+            if self.paged:
+                # the live decode input IS a gathered view; gathering the
+                # (empty, sentinel-clamped) tables warms both the gather and
+                # the step on exactly the avals decode will present
+                state = self.kv.gather_state()
+            else:
+                state = self._place_state(self.plan.decode_state(
+                    self.slots, self.max_len, per_slot_len=True))
+        self._step(self.params, state, jnp.zeros((self.slots, 1), jnp.int32),
+                   self._seed, self._gen_steps(), self._temp, self._topk,
+                   self._topp)
 
     # ------------------------------------------------------------------ API
     def submit(self, req: GenerationRequest, *,
@@ -960,7 +1041,8 @@ class ServingEngine:
                     and self._cursor > 0 and not fits(head)):
                 # drained but the cursor is spent: fresh state, cursor 0.
                 # submit() guarantees every queued request fits from there.
-                self.state = self.plan.decode_state(self.slots, self.max_len)
+                self.state = self._place_state(
+                    self.plan.decode_state(self.slots, self.max_len))
                 self._cursor = 0
         for s, _req in self._admit(fits=fits):
             self.pos[s] = 0

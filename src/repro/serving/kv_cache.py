@@ -96,7 +96,7 @@ class SlotKVCache:
     """Slot table over the transformer-family decode cache."""
 
     def __init__(self, cfg: ModelConfig, slots: int, max_len: int,
-                 dtype=jnp.float32, kv_bits: int | None = None):
+                 dtype=jnp.float32, kv_bits: int | None = None, mesh=None):
         self.cfg = cfg
         self.slots = slots
         self.max_len = max_len
@@ -105,14 +105,24 @@ class SlotKVCache:
         self.state = api.decode_state(cfg, slots, max_len, dtype=dtype,
                                       per_slot_len=True,
                                       kv_bits=self.kv_bits)
+        if mesh is not None:
+            # tensor-parallel serving (DESIGN.md §16): KV heads partition
+            # over the "model" axis; cursors replicate. The donated jitted
+            # mutations above then keep the placement — donation aliases
+            # the sharded buffers in place.
+            from ..distributed.sharding import (place_serving,
+                                                serving_state_specs)
+            self.state = place_serving(
+                self.state, mesh, serving_state_specs(self.state, mesh))
 
     @classmethod
-    def from_plan(cls, plan, slots: int, max_len: int) -> "SlotKVCache":
+    def from_plan(cls, plan, slots: int, max_len: int,
+                  mesh=None) -> "SlotKVCache":
         """Slot table with the plan's decode dtype and KV precision — the
         engine allocates through here so the cache can never disagree with
         the plan the prefill/decode steps were built from."""
         return cls(plan.cfg, slots, max_len, dtype=plan.jnp_dtype,
-                   kv_bits=plan.kv_bits)
+                   kv_bits=plan.kv_bits, mesh=mesh)
 
     @property
     def quantized(self) -> bool:

@@ -32,6 +32,13 @@ the block pool's ``stats()`` dict each step — last-write-wins gauges
 (bytes in use, blocks allocated/free, prefix blocks shared by reference,
 COW forks, evictions), surfaced under the summary's ``kv`` key and drained
 by ``pop_summary()`` like everything else.
+
+First-vs-steady split (DESIGN.md §16): the FIRST step of each kind an
+engine ever runs pays jit trace + compile; ``{kind}_first_ms`` reports that
+lifetime-first latency and ``{kind}_steady_p50_ms`` the p50 with it
+excluded, so the cold-start cut from engine pre-warming is directly visible
+next to the steady state. Both are LIFETIME values — ``pop_summary()``
+drains the sample windows but never forgets which step was first.
 """
 from __future__ import annotations
 
@@ -74,6 +81,13 @@ class ServeMetrics:
         # time; the standalone default stays perf_counter, unchanged.
         self.window = window
         self._clock = clock
+        # lifetime (never reset): kind -> first recorded seconds, and
+        # kind -> total events ever recorded — together they tell summary()
+        # whether the current window still CONTAINS the lifetime-first
+        # sample (window count == lifetime count) and must exclude it from
+        # the steady percentile.
+        self._first: dict = {}
+        self._lifetime: dict = {}
         self._reset()
 
     def _reset(self) -> None:
@@ -95,6 +109,9 @@ class ServeMetrics:
                tenant: Optional[str] = None) -> None:
         assert kind in STEP_KINDS, kind
         self._events.append((kind, seconds, tokens))
+        if kind not in self._first:
+            self._first[kind] = seconds
+        self._lifetime[kind] = self._lifetime.get(kind, 0) + 1
         if tenant is not None:
             cell = self._label_steps.setdefault((tenant, kind), [0, 0])
             cell[0] += 1
@@ -152,6 +169,18 @@ class ServeMetrics:
             out[f"{kind}_p50_ms"] = p50
             out[f"{kind}_p99_ms"] = p99
             out[f"{kind}_mean_ms"] = float(lat.mean() * 1e3)
+            out[f"{kind}_first_ms"] = float(self._first[kind] * 1e3)
+            # steady = the window minus the LIFETIME-first sample, which is
+            # at index 0 exactly when the window holds every event ever
+            # recorded for this kind (no pop_summary, no deque trim since)
+            steady = (lat[1:] if self._lifetime.get(kind) == len(lat)
+                      else lat)
+            if len(steady):
+                out[f"{kind}_steady_p50_ms"] = _pcts(steady)[0]
+        # lifetime-first latencies outlive pop_summary() windows: surface
+        # them even when the current window holds no samples of that kind
+        for kind, first in self._first.items():
+            out.setdefault(f"{kind}_first_ms", float(first * 1e3))
         out["total_tokens"] = total_tokens
         busy = sum(s for _, s, _ in self._events)
         out["tokens_per_s"] = total_tokens / max(busy, 1e-9)

@@ -49,15 +49,19 @@ class Scheduler:
         self.active: list[Optional[GenerationRequest]] = [None] * slots
         self.done: list[GenerationRequest] = []
         self._shed: list[GenerationRequest] = []
-        self._next_id = 0
+        # rid source: a shareable counter OBJECT, not a plain int — a
+        # ReplicaSet (serving/replicas.py) points every member engine's
+        # scheduler at ONE counter so a rid names a request fleet-wide
+        # (n>1 fanout children draw from a member's own scheduler, so an
+        # unshared per-engine int would collide across replicas).
+        self._ids = itertools.count()
 
     # ------------------------------------------------------------- lifecycle
     def assign_id(self, req: GenerationRequest) -> GenerationRequest:
         """Give a request its rid without enqueueing it (the engine assigns
         before validation so rejections reference a real request id)."""
         if req.rid < 0:
-            req.rid = self._next_id
-            self._next_id += 1
+            req.rid = next(self._ids)
         return req
 
     def submit(self, req: GenerationRequest) -> GenerationRequest:

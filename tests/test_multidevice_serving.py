@@ -1,0 +1,160 @@
+"""Tensor-parallel serving on a forced multi-device host (DESIGN.md §16).
+
+NOT part of the default suite: tests/conftest.py deliberately sets no XLA
+device-count flags (the tier-1 run must see the host as-is), so this module
+only runs when the caller opted in:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        REPRO_MULTIDEVICE=1 PYTHONPATH=src \\
+        python -m pytest tests/test_multidevice_serving.py -q
+
+The correctness bar is BYTE-IDENTITY: a plan built at tp=N must emit the
+same token streams as tp=1 for every (w_bits, kv_bits, kv_paging) cell —
+int32 matmul accumulation makes the row-parallel psums exact, and the
+sampler inputs (embed / lm_head) stay replicated so the fp reduction order
+matches the single-device run.
+"""
+import os
+
+import pytest
+
+if os.environ.get("REPRO_MULTIDEVICE") != "1":          # noqa: E402 — the
+    # guard must run before jax initializes the platform
+    pytest.skip("set REPRO_MULTIDEVICE=1 (with XLA_FLAGS="
+                "--xla_force_host_platform_device_count=8) to run",
+                allow_module_level=True)
+
+import jax  # noqa: E402
+
+if jax.device_count() < 4:
+    pytest.skip(f"needs >= 4 XLA devices, host has {jax.device_count()} "
+                "(export XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+                allow_module_level=True)
+
+import numpy as np  # noqa: E402
+
+from repro.configs import get_config, reduced  # noqa: E402
+from repro.core.policy import QuantPolicy  # noqa: E402
+from repro.deploy import (DeployedModel, ExecutionPlan,  # noqa: E402
+                          deploy)
+from repro.launch.mesh import make_mesh_for_devices, make_tp_mesh  # noqa: E402
+from repro.models import api  # noqa: E402
+from repro.serving import GenerationRequest, ServingEngine  # noqa: E402
+
+pytestmark = pytest.mark.multidevice
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg():
+    return reduced(get_config("stablelm-3b")).replace(act="gelu")
+
+
+def _prompts(vocab, n=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, vocab, int(rng.integers(3, 7))).astype(np.int32)
+            for _ in range(n)]
+
+
+def _serve(model, prompts, *, slots=2, max_len=32):
+    eng = ServingEngine(model, slots=slots, max_len=max_len)
+    streams = [eng.submit(GenerationRequest(prompt=p, max_new_tokens=4))
+               for p in prompts]
+    eng.run_until_drained()
+    return [tuple(s.result().tokens) for s in streams]
+
+
+def _save(model, path):
+    return model.save(str(path))
+
+
+# ------------------------------------------------------- byte-identity grid
+@pytest.mark.parametrize("last_k_int4", [0, None],
+                         ids=["int8", "int4"])
+@pytest.mark.parametrize("kv_bits", [16, 8, 4],
+                         ids=["kv16", "kv8", "kv4"])
+@pytest.mark.parametrize("kv_paging", ["dense", "paged"])
+def test_tp_streams_byte_identical(tmp_path, last_k_int4, kv_bits,
+                                   kv_paging):
+    cfg = _cfg()
+    k = cfg.num_layers if last_k_int4 is None else last_k_int4
+    pol = QuantPolicy(num_layers=cfg.num_layers, mode="int", last_k_int4=k)
+    plan = ExecutionPlan.build(cfg, pol, backend="reference",
+                               kv_bits=kv_bits, kv_paging=kv_paging)
+    model = deploy(api.init_model(cfg, KEY), plan)
+    prompts = _prompts(cfg.vocab_size)
+    ref = _serve(model, prompts)
+    path = _save(model, tmp_path / "art")
+    for tp in (2, 4):
+        sharded = DeployedModel.load(path, tp=tp)    # tp=1 -> N reshard
+        assert sharded.plan.tp == tp
+        got = _serve(sharded, prompts)
+        assert got == ref, (f"tp={tp} diverged from tp=1 "
+                            f"({last_k_int4=}, {kv_bits=}, {kv_paging=})")
+
+
+def test_artifact_saved_sharded_reshards_both_ways(tmp_path):
+    cfg = _cfg()
+    pol = QuantPolicy(num_layers=cfg.num_layers, mode="int",
+                      last_k_int4=cfg.num_layers)
+    plan = ExecutionPlan.build(cfg, pol, backend="reference", kv_bits=8,
+                               tp=2)
+    model = deploy(api.init_model(cfg, KEY), plan)
+    prompts = _prompts(cfg.vocab_size, seed=1)
+    ref = _serve(model, prompts)
+    path = _save(model, tmp_path / "tp2")       # saved WITH tp=2 layout
+
+    as_saved = DeployedModel.load(path)          # layout from metadata
+    assert as_saved.plan.tp == 2
+    assert _serve(as_saved, prompts) == ref
+
+    for tp in (1, 4):                            # reshard on load, both ways
+        re = DeployedModel.load(path, tp=tp)
+        assert re.plan.tp == tp
+        assert _serve(re, prompts) == ref
+
+
+def test_sharded_params_actually_span_devices():
+    cfg = _cfg()
+    pol = QuantPolicy(num_layers=cfg.num_layers, mode="int",
+                      last_k_int4=cfg.num_layers)
+    plan = ExecutionPlan.build(cfg, pol, backend="reference", tp=4)
+    model = deploy(api.init_model(cfg, KEY), plan)
+    wq = model.params["layers"][0]["attn"]["wq"]["wq"]
+    assert len(wq.sharding.device_set) == 4
+    # sampler inputs stay replicated (byte-identity contract)
+    assert len(model.params["embed"].sharding.device_set) == 4
+    assert model.params["embed"].sharding.is_fully_replicated
+
+
+def test_warmup_composes_with_tp():
+    cfg = _cfg()
+    pol = QuantPolicy(num_layers=cfg.num_layers, mode="int",
+                      last_k_int4=cfg.num_layers)
+    plan = ExecutionPlan.build(cfg, pol, backend="reference", kv_bits=8,
+                               tp=2)
+    model = deploy(api.init_model(cfg, KEY), plan)
+    eng = ServingEngine(model, slots=2, max_len=32, warmup=True)
+    assert set(eng._prefill_fns) == {(8, 1), (16, 1), (32, 1)}
+    prompts = _prompts(cfg.vocab_size, n=2, seed=2)
+    streams = [eng.submit(GenerationRequest(prompt=p, max_new_tokens=4))
+               for p in prompts]
+    eng.run_until_drained()
+    assert all(len(s.result().tokens) == 4 for s in streams)
+
+
+# ------------------------------------------------------------ mesh metadata
+def test_mesh_layout_on_eight_devices():
+    layout = make_mesh_for_devices(8, 4)
+    assert layout.shape == (2, 4)
+    assert not layout.degraded
+    assert layout.requested_model == 4
+
+    degraded = make_mesh_for_devices(8, 3, allow_degrade=True)
+    assert degraded.degraded
+    assert degraded.requested_model == 3
+    assert degraded.shape[1] == 1           # halved 3 -> 1 (the old silent
+    #                                         behavior, now labeled)
+
+    mesh = make_tp_mesh(4)
+    assert mesh.shape["model"] == 4

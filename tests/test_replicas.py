@@ -1,0 +1,128 @@
+"""ReplicaSet: data-parallel engines behind one admission surface
+(DESIGN.md §16). Single-device — replicas share the same host arrays."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.policy import QuantPolicy
+from repro.deploy import ExecutionPlan, deploy
+from repro.models import api
+from repro.serving import (GenerationRequest, ReplicaSet, SamplingParams,
+                           ServingEngine)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = reduced(get_config("stablelm-3b")).replace(act="gelu")
+    pol = QuantPolicy(num_layers=cfg.num_layers, mode="int",
+                      last_k_int4=cfg.num_layers)
+    plan = ExecutionPlan.build(cfg, pol, backend="reference", kv_bits=8)
+    return deploy(api.init_model(cfg, jax.random.PRNGKey(0)), plan)
+
+
+def _prompts(vocab, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, vocab, int(rng.integers(3, 7))).astype(np.int32)
+            for _ in range(n)]
+
+
+def test_shared_rid_space(model):
+    rs = ReplicaSet(model, replicas=3, slots=2, max_len=32)
+    streams = [rs.submit(GenerationRequest(prompt=p, max_new_tokens=2))
+               for p in _prompts(model.plan.cfg.vocab_size, 6)]
+    # one counter set-wide: sequential rids even though members alternate
+    assert [s.rid for s in streams] == list(range(6))
+    assert all(e.scheduler._ids is rs.engines[0].scheduler._ids
+               for e in rs.engines)
+
+
+def test_least_loaded_dispatch(model):
+    rs = ReplicaSet(model, replicas=2, slots=2, max_len=32)
+    p1, p2 = _prompts(model.plan.cfg.vocab_size, 2)
+    s1 = rs.submit(GenerationRequest(prompt=p1, max_new_tokens=2))
+    s2 = rs.submit(GenerationRequest(prompt=p2, max_new_tokens=2))
+    owner = [next(e for e in rs.engines if s.rid in e._streams)
+             for s in (s1, s2)]
+    assert owner[0] is rs.engines[0]       # tie -> lowest index
+    assert owner[1] is rs.engines[1]       # then the now-emptier member
+
+
+def test_streams_match_single_engine(model):
+    vocab = model.plan.cfg.vocab_size
+    prompts = _prompts(vocab, 8, seed=3)
+
+    def run(make):
+        eng = make()
+        streams = [eng.submit(GenerationRequest(prompt=p, max_new_tokens=4))
+                   for p in prompts]
+        eng.run_until_drained()
+        return [tuple(s.result().tokens) for s in streams]
+
+    single = run(lambda: ServingEngine(model, slots=2, max_len=32))
+    multi = run(lambda: ReplicaSet(model, replicas=2, slots=2, max_len=32))
+    # tokens are a function of (prompt, seed) only — never of the member,
+    # slot or batch that served the request
+    assert single == multi
+
+
+def test_replicas_drain_in_fewer_steps(model):
+    vocab = model.plan.cfg.vocab_size
+    prompts = _prompts(vocab, 8, seed=5)
+
+    def steps(make):
+        eng = make()
+        for p in prompts:
+            eng.submit(GenerationRequest(prompt=p, max_new_tokens=4))
+        return eng.run_until_drained()
+
+    one = steps(lambda: ServingEngine(model, slots=2, max_len=32))
+    two = steps(lambda: ReplicaSet(model, replicas=2, slots=2, max_len=32))
+    # 2x the slots pumped per step: the backlog halves (within a step or
+    # two of slack for ragged tail batches)
+    assert two <= one // 2 + 2
+
+
+def test_pop_done_rid_sorted(model):
+    rs = ReplicaSet(model, replicas=2, slots=2, max_len=32)
+    prompts = _prompts(model.plan.cfg.vocab_size, 6, seed=7)
+    for p in prompts:
+        rs.submit(GenerationRequest(prompt=p, max_new_tokens=3))
+    rs.run_until_drained()
+    done = rs.pop_done()
+    assert [r.rid for r in done] == sorted(r.rid for r in done)
+    assert len(done) == 6
+    assert rs.pop_done() == []
+    assert rs.done == []
+
+
+def test_cancel_reaches_any_member(model):
+    rs = ReplicaSet(model, replicas=2, slots=1, max_len=32)
+    prompts = _prompts(model.plan.cfg.vocab_size, 4, seed=9)
+    streams = [rs.submit(GenerationRequest(prompt=p, max_new_tokens=8))
+               for p in prompts]
+    # rid 3 landed on member 1 (round-robin under equal load); the set-level
+    # cancel must find it without a replica argument
+    assert rs.cancel(streams[3].rid)
+    assert streams[3].cancel() is False    # already cancelled
+    rs.run_until_drained()
+    by_rid = {r.rid: r for r in rs.pop_done()}
+    assert by_rid[streams[3].rid].finish_reason == "cancelled"
+    assert all(by_rid[s.rid].finish_reason == "length"
+               for s in streams if s is not streams[3])
+
+
+def test_fanout_children_get_unique_rids(model):
+    rs = ReplicaSet(model, replicas=2, slots=2, max_len=32)
+    vocab = model.plan.cfg.vocab_size
+    p = _prompts(vocab, 1, seed=11)[0]
+    kids = rs.submit(GenerationRequest(
+        prompt=p, max_new_tokens=2,
+        sampling=SamplingParams(temperature=0.8, seed=0, n=3)))
+    solo = rs.submit(GenerationRequest(prompt=p, max_new_tokens=2))
+    rids = [s.rid for s in kids] + [solo.rid]
+    # children draw from their member's scheduler — which is the SHARED
+    # counter, so no rid collides across members
+    assert len(set(rids)) == len(rids)
+    rs.run_until_drained()
+    assert len(rs.pop_done()) == 4

@@ -1,0 +1,295 @@
+"""Tensor-parallel plan axis, mesh metadata, serving shard rules, engine
+warmup and the cheap autosearch probe (DESIGN.md §16/§13).
+
+Everything here runs on a single device: plan validation, spec resolution
+and the MeshLayout metadata never build a multi-device mesh (that is the
+point — a sharded plan must be constructible anywhere). The actual
+multi-device byte-identity runs live in tests/test_multidevice_serving.py
+behind REPRO_MULTIDEVICE=1.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, reduced
+from repro.core.policy import QuantPolicy
+from repro.deploy import ExecutionPlan, deploy
+from repro.deploy.plan import plan_from_meta, plan_to_meta
+from repro.launch.mesh import make_mesh_for_devices, make_tp_mesh
+from repro.models import api
+
+
+def _cfg():
+    return reduced(get_config("stablelm-3b")).replace(act="gelu")
+
+
+def _int4_policy(cfg):
+    return QuantPolicy(num_layers=cfg.num_layers, mode="int",
+                       last_k_int4=cfg.num_layers)
+
+
+# --------------------------------------------------------- mesh metadata
+class TestMeshLayout:
+    def test_auto_single_device(self):
+        layout = make_mesh_for_devices(1)
+        assert layout.shape == (1, 1)
+        assert layout.requested_model == 0
+        assert not layout.degraded
+        assert layout.mesh.axis_names == ("data", "model")
+
+    def test_explicit_non_divisor_raises(self):
+        # the old behavior silently halved 4 -> 2 on 6 devices; now the
+        # mismatch is an error naming both numbers (no mesh is built, so
+        # this asserts fine on a 1-device host)
+        with pytest.raises(ValueError, match="does not divide"):
+            make_mesh_for_devices(6, 4)
+
+    def test_bad_count_raises(self):
+        with pytest.raises(ValueError, match="n_devices"):
+            make_mesh_for_devices(0)
+
+    def test_tp_mesh_needs_devices(self):
+        need = jax.device_count() + 1
+        with pytest.raises(RuntimeError, match="host has"):
+            make_tp_mesh(need)
+
+    def test_tp_mesh_single(self):
+        mesh = make_tp_mesh(1)
+        assert mesh.axis_names == ("model",)
+        assert mesh.shape["model"] == 1
+
+
+# ------------------------------------------------------ plan's tp axis
+class TestPlanTp:
+    def test_default_tp_is_one(self):
+        plan = ExecutionPlan.build(_cfg(), _int4_policy(_cfg()))
+        assert plan.tp == 1
+        assert plan.make_mesh() is None
+
+    def test_build_kwargs_round_trip(self):
+        cfg = _cfg()
+        plan = ExecutionPlan.build(cfg, _int4_policy(cfg), tp=2)
+        assert plan.tp == 2
+        assert plan.build_kwargs()["tp"] == 2
+        again = ExecutionPlan.build(cfg, plan.policy, **plan.build_kwargs())
+        assert again.tp == 2
+        assert "tp=2" in plan.describe()
+
+    def test_meta_round_trip_and_old_artifacts(self):
+        cfg = _cfg()
+        plan = ExecutionPlan.build(cfg, _int4_policy(cfg), tp=4)
+        meta = plan_to_meta(plan)
+        assert plan_from_meta(meta).tp == 4
+        # an artifact written before the tp axis existed has no "tp" key
+        # and must load as the single-device layout
+        old = {**meta, "build": {k: v for k, v in meta["build"].items()
+                                 if k != "tp"}}
+        assert plan_from_meta(old).tp == 1
+
+    def test_pallas_backend_rejected(self):
+        cfg = _cfg()
+        with pytest.raises(ValueError, match="single-device"):
+            ExecutionPlan.build(cfg, _int4_policy(cfg), backend="pallas",
+                                tp=2)
+
+    def test_fp_policy_rejected(self):
+        with pytest.raises(ValueError, match="mode='int'"):
+            ExecutionPlan.build(_cfg(), None, tp=2)
+
+    def test_act_bits_zero_rejected(self):
+        cfg = _cfg()
+        with pytest.raises(ValueError, match="act_bits=0"):
+            ExecutionPlan.build(cfg, _int4_policy(cfg), act_bits=0, tp=2)
+
+    def test_head_divisibility(self):
+        cfg = _cfg()   # 4 heads: tp=3 cannot split them
+        with pytest.raises(ValueError, match="num_heads"):
+            ExecutionPlan.build(cfg, _int4_policy(cfg), tp=3)
+
+    def test_int4_packed_rows_divisibility(self):
+        # d_ff=26 divides tp=2 but NOT 2*tp=4: int4 codes shard their
+        # packed K/2 nibble-pair rows, so the int4 build must refuse where
+        # the int8 build (no packing) sails through
+        cfg = _cfg().replace(d_ff=26)
+        pol = _int4_policy(cfg)
+        with pytest.raises(ValueError, match="2\\*tp"):
+            ExecutionPlan.build(cfg, pol, tp=2)
+        int8 = QuantPolicy(num_layers=cfg.num_layers, mode="int",
+                           last_k_int4=0)
+        assert ExecutionPlan.build(cfg, int8, tp=2).tp == 2
+
+    def test_token_only_family_rejected(self):
+        cfg = reduced(get_config("xlstm-1.3b"))
+        pol = QuantPolicy(num_layers=cfg.num_layers, mode="int",
+                          last_k_int4=0)
+        with pytest.raises(ValueError, match="family"):
+            ExecutionPlan.build(cfg, pol, prefill_mode="token", tp=2)
+
+    def test_tp_mesh_lazy_until_placement(self):
+        # the plan builds on any host; the device check fires at placement
+        cfg = _cfg()
+        need = jax.device_count() * 4   # guaranteed more than available
+        plan = ExecutionPlan.build(cfg, _int4_policy(cfg), tp=need)
+        with pytest.raises(RuntimeError, match="host has"):
+            plan.make_mesh()
+
+
+# --------------------------------------------------- serving shard rules
+class TestServingSpecs:
+    def test_param_specs(self):
+        from repro.distributed.sharding import serving_param_specs
+        cfg = _cfg()
+        plan = ExecutionPlan.build(cfg, _int4_policy(cfg))
+        params = deploy(api.init_model(cfg, jax.random.PRNGKey(0)),
+                        plan).params
+        specs = serving_param_specs(params)
+        # sampler inputs replicated (byte-identity rule), stacks sharded
+        assert specs["embed"] == P(None, None)
+        assert specs["lm_head"] == P(None, None)
+        attn = specs["layers"][0]["attn"]
+        for w in ("wq", "wk", "wv"):                  # column-parallel
+            assert attn[w]["wq"][-1] == "model"
+            assert attn[w]["s_w"][-1] == "model"      # scales follow out dim
+        assert attn["wo"]["wq"][-2] == "model"        # row-parallel packed K
+        ffn = specs["layers"][0]["ffn"]
+        assert ffn["w1"]["wq"][-1] == "model"
+        assert ffn["w1"]["b"][-1] == "model"          # bias rides the shard
+        assert ffn["w2"]["wq"][-2] == "model"
+        assert ffn["w2"]["s_w"][-1] is None           # row-parallel scale:
+        #                                               N axis stays intact
+        assert attn["wo"]["s_a"] == P(None)           # act scales replicated
+
+    def test_state_specs(self):
+        from repro.distributed.sharding import serving_state_specs
+        mesh = make_tp_mesh(1)
+        cfg = _cfg()
+        plan = ExecutionPlan.build(cfg, _int4_policy(cfg), kv_bits=4)
+        state = plan.decode_state(2, 32, per_slot_len=True)
+        specs = serving_state_specs(state, mesh)
+        flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+        by_base = {"/".join(str(getattr(p, "key", p)) for p in path)
+                   .rsplit("/", 1)[-1]: spec for path, spec in flat}
+        assert by_base["k_q"][-2] == "model"       # quantized KV heads
+        assert by_base["k_scale"][-1] == "model"   # per-(token, head) scale
+        assert all(a is None for a in by_base["len"])
+
+
+# --------------------------------------------------------------- warmup
+class TestWarmup:
+    def test_prewarm_populates_compile_keys(self):
+        from repro.serving import ServingEngine
+        cfg = _cfg()
+        plan = ExecutionPlan.build(cfg, _int4_policy(cfg), kv_bits=8)
+        model = deploy(api.init_model(cfg, jax.random.PRNGKey(0)), plan)
+        eng = ServingEngine(model, slots=2, max_len=32, warmup=True)
+        # bucket ladder 8/16/32 at n=1 (prefill_batch=1), all compiled
+        assert set(eng._prefill_fns) == {(8, 1), (16, 1), (32, 1)}
+        # warmup itself records nothing
+        assert "prefill_steps" not in eng.metrics.summary()
+
+    def test_first_vs_steady_metrics(self):
+        from repro.serving import GenerationRequest, ServingEngine
+        cfg = _cfg()
+        plan = ExecutionPlan.build(cfg, _int4_policy(cfg))
+        model = deploy(api.init_model(cfg, jax.random.PRNGKey(0)), plan)
+        eng = ServingEngine(model, slots=2, max_len=32)
+        rng = np.random.default_rng(0)
+        eng.submit(GenerationRequest(
+            prompt=rng.integers(1, cfg.vocab_size, 5).astype(np.int32),
+            max_new_tokens=4))
+        eng.run_until_drained()
+        s = eng.metrics.summary()
+        assert s["decode_first_ms"] > 0
+        # 3 decode steps: steady excludes the lifetime-first sample
+        assert "decode_steady_p50_ms" in s
+        assert s["prefill_first_ms"] > 0
+        # lifetime-first survives the pop_summary drain
+        eng.metrics.pop_summary()
+        assert eng.metrics.summary()["decode_first_ms"] == s["decode_first_ms"]
+
+
+# ------------------------------------------------- cheap autosearch probe
+class TestCachedProbe:
+    def test_probe_matches_full_deploy_exactly(self):
+        from repro.core.autosearch import cached_probe_scorer
+        from repro.data.synthetic import SyntheticClassification
+        from repro.models.bert import (bert_classify_logits,
+                                       init_bert_classifier, tinybert_config)
+
+        cfg = tinybert_config(layers=3, d=64, heads=4, d_ff=128, vocab=256,
+                              name="tinybert-probe")
+        data = SyntheticClassification(cfg.vocab_size, 12, 16,
+                                       num_classes=2, seed=0)
+        params = init_bert_classifier(cfg, 2, jax.random.PRNGKey(0))
+        calib = [data.batch(100 + i) for i in range(2)]
+        n_deploys = [0]
+
+        def deploy_policy(pol):
+            n_deploys[0] += 1
+            plan = ExecutionPlan.build(cfg, pol, backend="reference")
+            return deploy(params, plan, calib)
+
+        def score(model):
+            correct = total = 0
+            for i in range(3):
+                b = data.batch(10_000 + i)
+                logits, _ = bert_classify_logits(
+                    model.params, model.plan, jnp.asarray(b["tokens"]))
+                pred = np.asarray(jnp.argmax(logits, -1))
+                correct += int((pred == b["labels"]).sum())
+                total += len(pred)
+            return correct / total
+
+        cheap = cached_probe_scorer(deploy_policy, score)
+
+        def mk(int4):
+            return QuantPolicy(num_layers=cfg.num_layers, mode="int",
+                               int4_layers=tuple(int4))
+
+        # exhaustive: every subset of layers scores EXACTLY like the full
+        # re-deploy path (the assembled slices are the same packed bytes)
+        cheap_scores = {}
+        for mask in range(2 ** cfg.num_layers):
+            ls = tuple(l for l in range(cfg.num_layers) if mask >> l & 1)
+            cheap_scores[ls] = cheap(mk(ls))
+        # the cheap pass deployed exactly the two uniform grids
+        assert n_deploys[0] == 2
+        for ls, got in cheap_scores.items():
+            assert got == score(deploy_policy(mk(ls))), ls
+
+    def test_probe_memoizes(self):
+        from repro.core.autosearch import cached_probe_scorer
+        calls = [0]
+
+        @dataclasses.dataclass
+        class Fake:
+            plan: object
+            params: dict
+
+        def fake_deploy(pol):
+            raise AssertionError("fallback path must not deploy")
+
+        # non-'layers' tree triggers the fallback; use a real tiny model
+        # instead to confirm the memo: same policy scored twice = 1 eval
+        from repro.data.synthetic import SyntheticClassification
+        from repro.models.bert import init_bert_classifier, tinybert_config
+        cfg = tinybert_config(layers=2, d=64, heads=4, d_ff=128, vocab=256,
+                              name="tinybert-memo")
+        params = init_bert_classifier(cfg, 2, jax.random.PRNGKey(1))
+
+        def deploy_policy(pol):
+            plan = ExecutionPlan.build(cfg, pol, backend="reference")
+            return deploy(params, plan)
+
+        def score(model):
+            calls[0] += 1
+            return float(len(model.plan.segments))
+
+        cheap = cached_probe_scorer(deploy_policy, score)
+        pol = QuantPolicy(num_layers=2, mode="int", int4_layers=(0,))
+        a, b = cheap(pol), cheap(pol)
+        assert a == b and calls[0] == 1

@@ -132,6 +132,26 @@ def check_goodput(current: dict, baseline: dict) -> list[str]:
               f"{cap['budget_bytes'] >> 10}KiB "
               f"({cap['capacity_ratio']:.1f}x), "
               f"streams_match={cap['streams_match']}")
+
+    # replica scaling scenario (DESIGN.md §16) — a HARD gate, unlike the
+    # drift reports above: the virtual cost model is deterministic, so a
+    # 2-replica set below 1.8x single-engine capacity (or any stream
+    # divergence between the runs) is a real scheduling/dispatch bug,
+    # never noise.
+    rep = current.get("virtual", {}).get("replica_scale")
+    if rep is not None:
+        ratio = rep["capacity_ratio"]
+        n_rep = rep.get("replica_count", 2)
+        goodputs = (rep["single"]["goodput"]["mean"],
+                    rep["replicas"]["goodput"]["mean"])
+        ok = (ratio >= 1.8 and rep["streams_match"]
+              and goodputs == (1.0, 1.0))
+        print(f"{'ok' if ok else 'FAIL'}: virtual replica_scale: "
+              f"{n_rep} replicas {ratio:.2f}x single-engine capacity "
+              f"(floor 1.8x), goodput {goodputs[1]:.2f}/{goodputs[0]:.2f}, "
+              f"streams_match={rep['streams_match']}")
+        if not ok:
+            failures.append("replica_scale")
     return failures
 
 
